@@ -1,0 +1,105 @@
+"""Shared benchmark substrate: a small pretrained LM + PTQ drivers.
+
+The paper's metrics need a model whose task loss responds to quantization:
+we pretrain a small transformer on the synthetic Markov corpus (data
+pipeline) until it clearly beats the unigram floor, cache the checkpoint,
+and measure perplexity deltas under each PTQ method — the scaled-down
+analogue of the paper's ImageNet/GLUE/WikiText tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs.base import ArchConfig
+from repro.core import QuantRecipe
+from repro.core.context import QuantCtx
+from repro.core.reconstruct import quantize_blocks
+from repro.data import CalibrationSet, SyntheticTokens
+from repro.models import build_model
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+
+CACHE = os.path.join(os.path.dirname(__file__), ".bench_cache")
+
+BENCH_CFG = ArchConfig(
+    name="bench-lm", family="dense", n_layers=4, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab=256, norm="rmsnorm", act="swiglu",
+    dtype="float32", attn_chunk=64, xent_chunk=64, remat=False)
+
+SEQ = 64
+TRAIN_STEPS = 300
+BATCH = 16
+
+
+def get_trained_lm(steps: int = TRAIN_STEPS) -> Tuple[object, Dict]:
+    """Returns (model, params) — pretrained small LM (cached on disk)."""
+    model = build_model(BENCH_CFG)
+    path = os.path.join(CACHE, f"bench_lm_{steps}")
+    if os.path.isdir(path):
+        params, _ = load_pytree(path)
+        return model, jax.tree.map(jnp.asarray, params)
+    src = SyntheticTokens(vocab=BENCH_CFG.vocab, seq_len=SEQ, seed=0)
+    params = model.init(jax.random.key(0))
+    opt_cfg = AdamConfig(lr=3e-3, grad_clip=1.0)
+    opt = adam_init(params, opt_cfg)
+
+    @jax.jit
+    def step(params, opt, batch):
+        def loss_fn(p):
+            loss, m = model.loss(p, batch, QuantCtx(mode="fp"))
+            return loss
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adam_update(grads, opt, params, opt_cfg)
+        return params, opt, loss
+
+    for i in range(steps):
+        params, opt, loss = step(params, opt, src.batch(i, BATCH))
+    os.makedirs(CACHE, exist_ok=True)
+    save_pytree(path, params)
+    return model, params
+
+
+def eval_ppl(model, params, n_batches: int = 8, ctx: Optional[QuantCtx] = None,
+             astates=None, recipe=None) -> float:
+    src = SyntheticTokens(vocab=BENCH_CFG.vocab, seq_len=SEQ, seed=99)
+    ctx = ctx or QuantCtx(mode="fp")
+    if astates is not None:
+        ctx = QuantCtx(mode="deploy", recipe=recipe, astates=astates)
+    tot, cnt = 0.0, 0
+    for i in range(n_batches):
+        batch = src.batch(50_000 + i, BATCH)
+        loss, _ = model.loss(params, batch, ctx)
+        tot += float(loss)
+        cnt += 1
+    return float(jnp.exp(tot / cnt))
+
+
+def ptq(model, params, recipe: QuantRecipe, n_calib: int = 64,
+        as_qtensor: bool = False):
+    """Full PTQ of the bench LM; returns (quantized params, astates, reports)."""
+    src = SyntheticTokens(vocab=BENCH_CFG.vocab, seq_len=SEQ, seed=0)
+    cal = CalibrationSet.build(src, n_calib)
+    x0, blocks, assemble = model.quant_blocks(params, cal.tokens)
+    finalized, astates, reports = quantize_blocks(
+        blocks, recipe, x0, as_qtensor=as_qtensor)
+    return assemble(finalized), astates, reports
+
+
+def timed(fn, *args, reps: int = 3) -> Tuple[float, object]:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def row(name: str, us: float, derived) -> str:
+    return f"{name},{us:.1f},{derived}"

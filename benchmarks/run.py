@@ -1,0 +1,42 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Run:
+    PYTHONPATH=src python -m benchmarks.run [--only tableN]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on table function names")
+    args = ap.parse_args()
+
+    from benchmarks.tables import ALL_TABLES
+
+    rows = ["name,us_per_call,derived"]
+    failures = 0
+    for fn in ALL_TABLES:
+        if args.only and args.only not in fn.__name__:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn(rows)
+            print(f"# {fn.__name__} done in {time.perf_counter()-t0:.1f}s",
+                  file=sys.stderr, flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {fn.__name__} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+    print("\n".join(rows), flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Serve a quantized model with batched requests (the e2e driver — the
+paper's kind is PTQ-for-deployment, so serving is the dictated scenario).
+
+  1. pretrain/load the small LM,
+  2. FlexRound-quantize weights to int8 (weight-only, per-channel),
+  3. run a batched serving engine: continuous prefill + decode over a queue
+     of requests with mixed prompt lengths, measuring tokens/s for bf16 vs
+     int8 vs int4 weights.
+
+    PYTHONPATH=src python examples/serve_quantized.py [--tokens 32]
+"""
+import argparse
+import sys
+import time
+
+import os
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import QuantRecipe
+from repro.core.context import QuantCtx
+
+
+class ServingEngine:
+    """Minimal batched engine: pad-batch prefill, lockstep decode."""
+
+    def __init__(self, model, params, max_len=128):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        ctx = QuantCtx(mode="deploy")
+        self._prefill = jax.jit(
+            lambda p, t, c: model.prefill(p, t, c, ctx))
+        self._step = jax.jit(
+            lambda p, t, c, pos: model.decode_step(p, t, c, pos, ctx))
+
+    def generate(self, prompts, n_tokens):
+        B = len(prompts)
+        S = max(len(p) for p in prompts)
+        toks = jnp.asarray([[0] * (S - len(p)) + list(p) for p in prompts],
+                           jnp.int32)
+        cache = self.model.init_cache(B, self.max_len)
+        _, cache = self._prefill(self.params, toks, cache)
+        out = []
+        cur = toks[:, -1:]
+        for t in range(n_tokens):
+            logits, cache = self._step(self.params, cur, cache,
+                                       jnp.int32(S + t))
+            cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out.append(cur)
+        return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    model, params = common.get_trained_lm()
+    rng = jax.random.key(7)
+    prompts = [list(map(int, jax.random.randint(
+        jax.random.fold_in(rng, i), (l,), 0, common.BENCH_CFG.vocab)))
+        for i, l in enumerate([8, 12, 16, 9, 14, 10, 16, 8][:args.batch])]
+
+    variants = {"bf16": params}
+    for bits, tag in ((8, "int8"), (4, "int4")):
+        recipe = QuantRecipe(method="flexround", w_bits=bits, a_bits=None,
+                             w_granularity="per_channel", iters=80, lr=3e-3,
+                             batch_size=16)
+        qp, _, _ = common.ptq(model, params, recipe, as_qtensor=True)
+        variants[tag] = qp
+
+    ref = None
+    for tag, p in variants.items():
+        eng = ServingEngine(model, p)
+        out = eng.generate(prompts, 4)  # warm compile
+        t0 = time.perf_counter()
+        out = eng.generate(prompts, args.tokens)
+        dt = time.perf_counter() - t0
+        tps = args.batch * args.tokens / dt
+        if ref is None:
+            ref = out
+        agree = float(jnp.mean(out == ref))
+        wbytes = sum(x.nbytes for x in jax.tree.leaves(p))
+        print(f"{tag:5s}: {tps:8.1f} tok/s  weights={wbytes/2**20:6.1f} MiB  "
+              f"greedy-token agreement vs bf16: {agree:.2%}")
+    print("\nOn TPU the int8/int4 variants cut the decode memory-roofline "
+          "term 2x/4x (see EXPERIMENTS.md §Perf); on CPU the win shows as "
+          "weight-bytes. Token agreement ~1.0 validates the quantization.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    CheckpointManager,
+    PTQCheckpointer,
+    load_pytree,
+    save_pytree,
+)

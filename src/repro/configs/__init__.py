@@ -1,0 +1,9 @@
+from repro.configs.base import ArchConfig, reduced  # noqa: F401
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config  # noqa: F401
+from repro.configs.shapes import (  # noqa: F401
+    SHAPE_IDS,
+    SHAPES,
+    ShapeSpec,
+    cell_applicable,
+    get_shape,
+)

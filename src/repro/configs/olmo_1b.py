@@ -1,0 +1,7 @@
+"""olmo-1b — non-parametric LayerNorm [arXiv:2402.00838; hf]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="olmo-1b", family="dense", n_layers=16, d_model=2048, n_heads=16,
+    n_kv_heads=16, d_ff=8192, vocab=50304, norm="layernorm_nonparam",
+    act="swiglu")

@@ -1,0 +1,11 @@
+"""recurrentgemma-2b — RG-LRU + local attention, pattern RRA [arXiv:2402.19427; hf].
+
+Sub-quadratic (O(1) recurrent state + 2048-token window) => runs long_500k.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b", family="hybrid", n_layers=26, d_model=2560,
+    n_heads=10, n_kv_heads=1, d_ff=7680, vocab=256000, head_dim=256,
+    local_window=2048, layer_pattern="RRA", lru_width=2560, act="geglu",
+    norm="rmsnorm", sub_quadratic=True)

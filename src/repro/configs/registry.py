@@ -1,0 +1,36 @@
+"""Registry over the 10 assigned architecture configs (one module each)."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, reduced
+from repro.configs import (
+    deepseek_v3_671b,
+    granite_3_2b,
+    llama4_scout_17b_a16e,
+    mamba2_130m,
+    olmo_1b,
+    phi3_vision_4_2b,
+    qwen2_5_14b,
+    recurrentgemma_2b,
+    smollm_135m,
+    whisper_medium,
+)
+
+_MODULES = (
+    qwen2_5_14b, smollm_135m, granite_3_2b, olmo_1b, recurrentgemma_2b,
+    llama4_scout_17b_a16e, deepseek_v3_671b, mamba2_130m, whisper_medium,
+    phi3_vision_4_2b,
+)
+
+_ARCHS = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+ARCH_IDS = tuple(_ARCHS)
+
+
+def get_config(name: str) -> ArchConfig:
+    try:
+        return _ARCHS[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; have {ARCH_IDS}")
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    return reduced(get_config(name))

@@ -1,0 +1,43 @@
+"""The assigned input-shape suite (applies to every architecture).
+
+  train_4k     seq 4,096   x batch 256   -> lowers train_step
+  prefill_32k  seq 32,768  x batch 32    -> lowers prefill (serve)
+  decode_32k   seq 32,768  x batch 128   -> lowers serve_step (1 new token,
+                                            KV cache of seq_len)
+  long_500k    seq 524,288 x batch 1     -> serve_step; ONLY for
+                                            sub-quadratic archs (ssm/hybrid)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+SHAPE_IDS = tuple(SHAPES)
+
+
+def get_shape(name: str) -> ShapeSpec:
+    return SHAPES[name]
+
+
+def cell_applicable(cfg, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Whether (arch x shape) runs; reason if skipped (per assignment)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: long_500k requires "
+                       "sub-quadratic attention (skip noted in DESIGN.md)")
+    return True, ""

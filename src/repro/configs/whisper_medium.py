@@ -1,0 +1,11 @@
+"""whisper-medium — enc-dec backbone; conv/audio frontend STUBBED [arXiv:2212.04356; unverified].
+
+input_specs feeds precomputed frame embeddings (B, S_enc, d_model).
+vocab 51865 not divisible by 16 => embed/head shard along d_model.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium", family="encdec", n_layers=24, d_model=1024,
+    n_heads=16, n_kv_heads=16, d_ff=4096, vocab=51865, enc_layers=24,
+    norm="layernorm", act="gelu", frontend="audio_stub")

@@ -1,0 +1,22 @@
+"""Paper core: FlexRound + rounding baselines + PTQ reconstruction engine."""
+from repro.core.quant_config import QuantConfig, QuantRecipe  # noqa: F401
+from repro.core.qtensor import QTensor, dequantize_qtensor  # noqa: F401
+from repro.core.context import QuantCtx  # noqa: F401
+from repro.core.reconstruct import (  # noqa: F401
+    BlockHandle,
+    Site,
+    quantize_blocks,
+    reconstruct_block,
+    finalize_block,
+)
+from repro.core import (  # noqa: F401
+    adaquant,
+    adaround,
+    flexround,
+    lsq,
+    methods,
+    observers,
+    qdrop,
+    quantizer,
+    rtn,
+)

@@ -1,0 +1,59 @@
+"""AdaQuant baseline (Hubara et al., 2021): additive perturbation + learnable s1.
+
+    Ŵ = s1 * ( clip( round( (W + V) / s1 ) + z, qmin, qmax ) - z )
+
+``V`` (init 0) and ``s1`` are both learned (STE through round). The paper uses
+this as the "learnable grid but additive" contrast to FlexRound.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import observers, qtensor
+from repro.core import quantizer as qz
+from repro.core.quant_config import QuantConfig
+
+EPS = 1e-6
+
+
+def init(w: jax.Array, qcfg: QuantConfig, key=None) -> Dict[str, jax.Array]:
+    scale, zero = observers.init_scale(w, qcfg)
+    return {
+        "s1": scale.astype(jnp.float32),
+        "zero": zero.astype(jnp.float32),
+        "v": jnp.zeros(w.shape, jnp.float32),
+    }
+
+
+def _codes(w, state, qcfg, ste: bool):
+    w32 = w.astype(jnp.float32)
+    rnd = qz.ste_round if ste else jnp.round
+    q = rnd((w32 + state["v"]) / state["s1"]) + state["zero"]
+    return jnp.clip(q, qcfg.qmin, qcfg.qmax)
+
+
+def apply(w: jax.Array, state: Dict[str, jax.Array], qcfg: QuantConfig) -> jax.Array:
+    q = _codes(w, state, qcfg, ste=True)
+    return (state["s1"] * (q - state["zero"])).astype(w.dtype)
+
+
+def loss_extra(state, qcfg, step, recipe) -> jax.Array:
+    return jnp.float32(0.0)
+
+
+def trainable(state: Dict[str, jax.Array]) -> Dict[str, bool]:
+    return {k: (k in ("v", "s1")) for k in state}
+
+
+def project(state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    out = dict(state)
+    out["s1"] = jnp.maximum(out["s1"], EPS)
+    return out
+
+
+def export(w, state, qcfg: QuantConfig, dtype=jnp.bfloat16) -> qtensor.QTensor:
+    q = _codes(w, state, qcfg, ste=False)
+    return qtensor.from_codes(q, state["s1"], state["zero"], qcfg, dtype=dtype)

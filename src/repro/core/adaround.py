@@ -1,0 +1,78 @@
+"""AdaRound baseline (Nagel et al., 2020): additive learnable rounding.
+
+    Ŵ = s1 * ( clip( floor(W / s1) + h(V) + z, qmin, qmax ) - z )
+    h(V) = clip( sigmoid(V) * (ζ - γ) + γ, 0, 1 ),  ζ = 1.1, γ = -0.1
+
+``s1`` is FIXED (AdaRound's structural limitation highlighted by the paper);
+only ``V`` is learned, with the annealed rounding regularizer
+
+    f_reg = λ Σ (1 - |2 h(V) - 1|^β),   β: 20 → 2 (cosine), after warmup.
+
+At export, rounding is hardened: h(V) >= 0.5 rounds up.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import observers, qtensor
+from repro.core.quant_config import QuantConfig
+
+ZETA = 1.1
+GAMMA = -0.1
+
+
+def rectified_sigmoid(v: jax.Array) -> jax.Array:
+    return jnp.clip(jax.nn.sigmoid(v) * (ZETA - GAMMA) + GAMMA, 0.0, 1.0)
+
+
+def init(w: jax.Array, qcfg: QuantConfig, key=None) -> Dict[str, jax.Array]:
+    scale, zero = observers.init_scale(w, qcfg)
+    w32 = w.astype(jnp.float32)
+    frac = w32 / scale - jnp.floor(w32 / scale)
+    # inverse rectified sigmoid so that h(V) == frac at init (soft-exact start)
+    p = jnp.clip((frac - GAMMA) / (ZETA - GAMMA), 1e-4, 1 - 1e-4)
+    v = jnp.log(p / (1 - p))
+    return {"s1": scale.astype(jnp.float32), "zero": zero.astype(jnp.float32), "v": v}
+
+
+def _codes(w, state, qcfg, hard: bool):
+    w32 = w.astype(jnp.float32)
+    h = rectified_sigmoid(state["v"])
+    if hard:
+        h = (h >= 0.5).astype(jnp.float32)
+    q = jnp.floor(w32 / state["s1"]) + h + state["zero"]
+    return jnp.clip(q, qcfg.qmin, qcfg.qmax)
+
+
+def apply(w: jax.Array, state: Dict[str, jax.Array], qcfg: QuantConfig) -> jax.Array:
+    q = _codes(w, state, qcfg, hard=False)
+    return (state["s1"] * (q - state["zero"])).astype(w.dtype)
+
+
+def loss_extra(state, qcfg, step, recipe) -> jax.Array:
+    """Annealed rounding regularizer pushing h(V) to {0, 1}."""
+    total = jnp.float32(recipe.iters)
+    warm = total * recipe.ada_warmup
+    t = jnp.clip((jnp.float32(step) - warm) / jnp.maximum(total - warm, 1.0), 0.0, 1.0)
+    beta = recipe.ada_beta_end + 0.5 * (recipe.ada_beta_start - recipe.ada_beta_end) * (
+        1.0 + jnp.cos(t * jnp.pi)
+    )
+    h = rectified_sigmoid(state["v"])
+    reg = jnp.sum(1.0 - jnp.abs(2.0 * h - 1.0) ** beta)
+    return jnp.where(jnp.float32(step) < warm, 0.0, recipe.ada_lambda * reg)
+
+
+def trainable(state: Dict[str, jax.Array]) -> Dict[str, bool]:
+    return {k: (k == "v") for k in state}
+
+
+def project(state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    return state
+
+
+def export(w, state, qcfg: QuantConfig, dtype=jnp.bfloat16) -> qtensor.QTensor:
+    q = _codes(w, state, qcfg, hard=True)
+    return qtensor.from_codes(q, state["s1"], state["zero"], qcfg, dtype=dtype)

@@ -1,0 +1,136 @@
+"""QuantCtx — the single integration point between models and quantization.
+
+Every linear/conv in the model zoo routes through ``ctx.linear`` /
+``ctx.conv2d``. Depending on ``mode`` the same model code runs:
+
+  fp       plain full-precision math (pretraining, teacher stream)
+  recon    weights fake-quantized via learnable rounding states, activations
+           LSQ-fake-quantized (+QDrop random dropping)  -> PTQ reconstruction
+  deploy   weights are QTensor leaves (int codes); dequant-matmul (optionally
+           via Pallas kernels); activations statically quantized (no drop)
+  calib    eager-only: record activation ranges per site (LSQ init)
+  capture  eager-only: record per-site inputs (layer-wise reconstruction)
+
+Site names are stable strings ("layers.3.attn.wq"); QDrop RNG is derived per
+site by folding a crc32 of the name into the step key.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lsq, methods, qdrop
+from repro.core.qtensor import QTensor, dequantize_qtensor
+from repro.core.quant_config import QuantConfig, QuantRecipe
+
+
+def site_key(key: jax.Array, name: str) -> jax.Array:
+    return jax.random.fold_in(key, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+
+
+@dataclasses.dataclass
+class QuantCtx:
+    mode: str = "fp"
+    recipe: Optional[QuantRecipe] = None
+    wstates: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    astates: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    key: Optional[jax.Array] = None
+    drop_enabled: bool = True
+    # eager-only stores
+    records: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # kernel backend for deploy mode: "xla" | "pallas" (pallas = interpret on CPU)
+    backend: str = "xla"
+
+    # -------------------------------------------------------------- helpers
+    def _wqcfg(self, batch_dims: int) -> QuantConfig:
+        c = self.recipe.weight_qconfig()
+        return dataclasses.replace(c, batch_dims=batch_dims) if batch_dims else c
+
+    def _aqcfg(self) -> Optional[QuantConfig]:
+        return self.recipe.act_qconfig() if self.recipe else None
+
+    def _act(self, name: str, x: jax.Array) -> jax.Array:
+        """Activation quantization before a linear (paper §4.3)."""
+        if self.mode == "fp":
+            return x
+        if self.mode == "calib":
+            x32 = x.astype(jnp.float32)
+            lo = float(jnp.min(x32))
+            hi = float(jnp.max(x32))
+            if name in self.records:
+                plo, phi = self.records[name]
+                lo, hi = min(lo, plo), max(hi, phi)
+            self.records[name] = (lo, hi)
+            return x
+        aq = self._aqcfg()
+        if aq is None or name not in self.astates:
+            return x
+        x_hat = lsq.apply(x, self.astates[name], aq)
+        if (self.mode == "recon" and self.recipe.setting == "qdrop"
+                and self.drop_enabled and self.key is not None):
+            return qdrop.qdrop(x, x_hat, self.recipe.drop_prob, site_key(self.key, name))
+        return x_hat
+
+    def _weight(self, name: str, w: Any, batch_dims: int) -> jax.Array:
+        if isinstance(w, QTensor):
+            return dequantize_qtensor(w)
+        if self.mode == "recon" and name in self.wstates:
+            method = methods.get(self.recipe.method)
+            return method.apply(w, self.wstates[name], self._wqcfg(batch_dims))
+        return w
+
+    # ------------------------------------------------------------------ ops
+    def get_weight(self, name: str, w: Any, batch_dims: int = 0) -> jax.Array:
+        """Effective (fake-quant / dequantized) weight for custom einsums
+        (e.g. MLA weight-absorbed decode)."""
+        return self._weight(name, w, batch_dims)
+
+    def linear(self, name: str, x: jax.Array, w: Any, b: Optional[jax.Array] = None,
+               batch_dims: int = 0) -> jax.Array:
+        """y = act_quant(x) @ weight_quant(w) + b.
+
+        w: (d_in, d_out), or (E, d_in, d_out) with batch_dims=1: then x has
+        shape (..., E, N, d_in) and the contraction is a per-expert matmul.
+        """
+        if self.mode == "capture":
+            self.records.setdefault(name, []).append(x)
+        x_eff = self._act(name, x)
+        if (self.mode == "deploy" and isinstance(w, QTensor)
+                and self.backend == "pallas" and batch_dims == 0):
+            from repro.kernels import ops as kops
+            y = kops.qtensor_matmul(x_eff, w, interpret=True)
+        else:
+            w_eff = self._weight(name, w, batch_dims)
+            if batch_dims == 0:
+                y = x_eff @ w_eff.astype(x_eff.dtype)
+            else:
+                y = jnp.einsum("...eni,eio->...eno", x_eff,
+                               w_eff.astype(x_eff.dtype))
+        if b is not None:
+            y = y + b.astype(y.dtype)
+        return y
+
+    def conv2d(self, name: str, x: jax.Array, w: Any, b: Optional[jax.Array] = None,
+               stride=(1, 1), padding="SAME") -> jax.Array:
+        """x: (N,H,W,Cin), w: (kh,kw,Cin,Cout)."""
+        if self.mode == "capture":
+            self.records.setdefault(name, []).append(x)
+        x_eff = self._act(name, x)
+        w_eff = self._weight(name, w, 0)
+        y = jax.lax.conv_general_dilated(
+            x_eff, w_eff.astype(x_eff.dtype), window_strides=stride, padding=padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        if b is not None:
+            y = y + b.astype(y.dtype)
+        return y
+
+
+FP_CTX = QuantCtx(mode="fp")
+
+
+def fp() -> QuantCtx:
+    return QuantCtx(mode="fp")

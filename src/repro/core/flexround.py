@@ -1,0 +1,101 @@
+"""FlexRound (the paper's contribution, Eq. 2).
+
+    Ŵ = s1 * ( clip( round( W / (s1 ⊙ S2 ⊙ s3 [⊙ s4]) ) + z, qmin, qmax ) - z )
+
+- ``s1``  grid size; scalar (per-tensor) or per-output-channel vector. Learnable.
+- ``s2``  element-wise division factor, same shape as W, init 1. Learnable.
+- ``s3``  per-output-channel factor, init 1. Learnable.
+- ``s4``  per-input-channel factor (rank-4 convolutions only), init 1. Learnable.
+- ``z``   integer zero point from the observer, fixed.
+
+Positivity of (s1, s2, s3, s4) is enforced by projection (clamp at eps) after
+each optimizer step — see ``project`` — keeping the raw parametrization so that
+Proposition 3.1's gradient identity  dL/dS' = -(W / S'^2) * dL/dŴ  holds
+*exactly* for the autodiff gradients (tested in tests/test_flexround.py).
+
+Weight layout conventions (JAX):
+  linear  W[d_in, d_out]             -> s3 has shape (1, d_out)
+  stacked W[E, d_in, d_out] (experts)-> batch_dims=1, s3 (E, 1, d_out)
+  conv    W[kh, kw, c_in, c_out]     -> s3 (1, 1, 1, c_out), s4 (1, 1, c_in, 1)
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import observers, qtensor
+from repro.core import quantizer as qz
+from repro.core.quant_config import QuantConfig
+
+EPS = 1e-6
+
+
+def _s3_shape(shape, qcfg: QuantConfig):
+    bd = qcfg.batch_dims
+    return tuple(shape[:bd]) + (1,) * (len(shape) - bd - 1) + (shape[-1],)
+
+
+def _is_conv(shape, qcfg: QuantConfig) -> bool:
+    return len(shape) - qcfg.batch_dims == 4
+
+
+def init(w: jax.Array, qcfg: QuantConfig, key=None) -> Dict[str, jax.Array]:
+    """State such that apply(w, state) == RTN fake-quant of w."""
+    scale, zero = observers.init_scale(w, qcfg)
+    st = {
+        "s1": scale.astype(jnp.float32),
+        "zero": zero.astype(jnp.float32),
+        "s2": jnp.ones(w.shape, jnp.float32),
+        "s3": jnp.ones(_s3_shape(w.shape, qcfg), jnp.float32),
+    }
+    if _is_conv(w.shape, qcfg):
+        bd = qcfg.batch_dims
+        s4_shape = tuple(w.shape[:bd]) + (1, 1, w.shape[bd + 2], 1)
+        st["s4"] = jnp.ones(s4_shape, jnp.float32)
+    return st
+
+
+def divisor(state: Dict[str, jax.Array]) -> jax.Array:
+    d = state["s1"] * state["s2"] * state["s3"]
+    if "s4" in state:
+        d = d * state["s4"]
+    return d
+
+
+def codes(w: jax.Array, state: Dict[str, jax.Array], qcfg: QuantConfig,
+          ste: bool = True) -> jax.Array:
+    """Float integer codes (incl. zero offset), clipped to the grid."""
+    w32 = w.astype(jnp.float32)
+    rnd = qz.ste_round if ste else jnp.round
+    q = rnd(w32 / divisor(state)) + state["zero"]
+    return jnp.clip(q, qcfg.qmin, qcfg.qmax)
+
+
+def apply(w: jax.Array, state: Dict[str, jax.Array], qcfg: QuantConfig) -> jax.Array:
+    """Differentiable fake-quant Ŵ (Eq. 2)."""
+    q = codes(w, state, qcfg, ste=True)
+    return (state["s1"] * (q - state["zero"])).astype(w.dtype)
+
+
+def loss_extra(state, qcfg, step, recipe) -> jax.Array:
+    return jnp.float32(0.0)
+
+
+def trainable(state: Dict[str, jax.Array]) -> Dict[str, bool]:
+    return {k: (k != "zero") for k in state}
+
+
+def project(state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    out = dict(state)
+    for k in ("s1", "s2", "s3", "s4"):
+        if k in out:
+            out[k] = jnp.maximum(out[k], EPS)
+    return out
+
+
+def export(w: jax.Array, state: Dict[str, jax.Array], qcfg: QuantConfig,
+           dtype=jnp.bfloat16) -> qtensor.QTensor:
+    q = codes(w, state, qcfg, ste=False)
+    return qtensor.from_codes(q, state["s1"], state["zero"], qcfg, dtype=dtype)

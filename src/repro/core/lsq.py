@@ -1,0 +1,52 @@
+"""LSQ/LSQ+ activation quantizer (Esser et al., 2020), as used by the paper
+for the activation step size during BRECQ/QDrop-setting reconstruction.
+
+    x̂ = s * clip( round( (x - β) / s ), qmin, qmax ) + β
+
+``s`` (step) and ``β`` (offset; LSQ+) are learned with the LSQ gradient scale
+g = 1 / sqrt(numel * qmax) applied via a forward-identity trick. Activations
+are quantized on the fly (dynamic graph position, static learned step).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizer as qz
+from repro.core.quant_config import QuantConfig
+
+EPS = 1e-8
+
+
+def init(x_sample: jax.Array, qcfg: QuantConfig) -> Dict[str, jax.Array]:
+    x32 = x_sample.astype(jnp.float32)
+    if qcfg.symmetric:
+        step = jnp.maximum(jnp.max(jnp.abs(x32)) / qcfg.qmax, EPS)
+        beta = jnp.float32(0.0)
+    else:
+        lo, hi = jnp.min(x32), jnp.max(x32)
+        lo, hi = jnp.minimum(lo, 0.0), jnp.maximum(hi, 0.0)
+        step = jnp.maximum((hi - lo) / (qcfg.qmax - qcfg.qmin), EPS)
+        beta = lo
+    return {"step": step.reshape(()), "beta": jnp.asarray(beta, jnp.float32).reshape(())}
+
+
+def apply(x: jax.Array, state: Dict[str, jax.Array], qcfg: QuantConfig) -> jax.Array:
+    g = 1.0 / jnp.sqrt(jnp.float32(x.size) * qcfg.qmax)
+    s = qz.grad_scale(state["step"], g)
+    b = qz.grad_scale(state["beta"], g)
+    x32 = x.astype(jnp.float32)
+    q = jnp.clip(qz.ste_round((x32 - b) / s), qcfg.qmin, qcfg.qmax)
+    return (s * q + b).astype(x.dtype)
+
+
+def trainable(state: Dict[str, jax.Array]) -> Dict[str, bool]:
+    return {"step": True, "beta": True}
+
+
+def project(state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    out = dict(state)
+    out["step"] = jnp.maximum(out["step"], EPS)
+    return out

@@ -1,0 +1,18 @@
+"""Registry of weight-rounding methods (paper §3 + baselines it compares to)."""
+from __future__ import annotations
+
+from repro.core import adaquant, adaround, flexround, rtn
+
+REGISTRY = {
+    "rtn": rtn,
+    "adaround": adaround,
+    "adaquant": adaquant,
+    "flexround": flexround,
+}
+
+
+def get(name: str):
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown rounding method {name!r}; have {list(REGISTRY)}")

@@ -1,0 +1,76 @@
+"""Scale/zero-point initialization ("observers").
+
+The paper initializes the grid size ``s1`` so that RTN starts from a good
+baseline; we provide the two standard choices:
+
+- ``minmax``: scale spans the full tensor (or channel) range.
+- ``mse``:    grid-search over range-shrink factors minimizing ‖W - Ŵ‖²
+              (the common AdaRound/BRECQ initialization).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant_config import QuantConfig
+from repro.core import quantizer as qz
+
+_MSE_GRID = 80
+_MSE_LO = 0.20
+
+
+def _range_stats(w: jax.Array, qcfg: QuantConfig) -> Tuple[jax.Array, jax.Array]:
+    axes = qz.reduce_axes(w.shape, qcfg)
+    wmin = jnp.min(w, axis=axes, keepdims=True)
+    wmax = jnp.max(w, axis=axes, keepdims=True)
+    return wmin.astype(jnp.float32), wmax.astype(jnp.float32)
+
+
+def _scale_zero_from_range(wmin, wmax, qcfg: QuantConfig):
+    eps = jnp.float32(1e-8)
+    if qcfg.symmetric:
+        amax = jnp.maximum(jnp.abs(wmin), jnp.abs(wmax))
+        scale = jnp.maximum(amax / qcfg.qmax, eps)
+        zero = jnp.zeros_like(scale)
+    else:
+        wmin = jnp.minimum(wmin, 0.0)
+        wmax = jnp.maximum(wmax, 0.0)
+        scale = jnp.maximum((wmax - wmin) / (qcfg.qmax - qcfg.qmin), eps)
+        zero = jnp.clip(jnp.round(-wmin / scale) + qcfg.qmin, qcfg.qmin, qcfg.qmax)
+    return scale, zero
+
+
+def minmax_scale(w: jax.Array, qcfg: QuantConfig):
+    wmin, wmax = _range_stats(w, qcfg)
+    return _scale_zero_from_range(wmin, wmax, qcfg)
+
+
+def mse_scale(w: jax.Array, qcfg: QuantConfig):
+    """Grid-search range shrinking: candidates p*[wmin, wmax], p in [0.2, 1]."""
+    w32 = w.astype(jnp.float32)
+    wmin, wmax = _range_stats(w32, qcfg)
+    axes = qz.reduce_axes(w.shape, qcfg)
+
+    def err_for(p):
+        scale, zero = _scale_zero_from_range(wmin * p, wmax * p, qcfg)
+        what = qz.fake_quant(w32, scale, zero, qcfg, ste=False)
+        err = jnp.sum((w32 - what) ** 2, axis=axes, keepdims=True)
+        return err, scale, zero
+
+    ps = jnp.linspace(_MSE_LO, 1.0, _MSE_GRID, dtype=jnp.float32)
+    errs, scales, zeros = jax.lax.map(err_for, ps)
+    best = jnp.argmin(errs, axis=0, keepdims=True)
+    scale = jnp.take_along_axis(scales, best, axis=0)[0]
+    zero = jnp.take_along_axis(zeros, best, axis=0)[0]
+    return scale, zero
+
+
+def init_scale(w: jax.Array, qcfg: QuantConfig):
+    """Dispatch on qcfg.observer. Returns (scale, zero) broadcastable to w."""
+    if qcfg.observer == "minmax":
+        return minmax_scale(w, qcfg)
+    if qcfg.observer == "mse":
+        return mse_scale(w, qcfg)
+    raise ValueError(f"unknown observer {qcfg.observer!r}")

@@ -1,0 +1,19 @@
+"""QDrop (Wei et al., 2022): randomly drop activation quantization during
+reconstruction so weight quantization is learned under partially-quantized
+activations. ``drop_prob`` is the probability an element keeps its FP value.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qdrop(x_fp: jax.Array, x_q: jax.Array, drop_prob: float, key: jax.Array,
+          enabled: bool = True) -> jax.Array:
+    """Element-wise mix of fp and fake-quant activations (QDrop eq. 7)."""
+    if not enabled or drop_prob <= 0.0:
+        return x_q
+    if drop_prob >= 1.0:
+        return x_fp
+    keep_fp = jax.random.bernoulli(key, p=drop_prob, shape=x_fp.shape)
+    return jnp.where(keep_fp, x_fp, x_q)

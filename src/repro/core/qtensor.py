@@ -1,0 +1,85 @@
+"""QTensor: the serialized form of a quantized weight.
+
+Stores integer codes plus the affine grid; this is what checkpoints hold and
+what the serving path consumes. Registered as a JAX pytree so it can live
+inside parameter trees, be sharded by pjit, and donated.
+
+Packing:
+  - bits >= 5 .... int8 codes, one per element
+  - bits <= 4 .... two 4-bit codes per int8 byte along the *first* axis
+                   ("int4x2"); dims must be even on that axis.
+Codes are stored zero-based for asymmetric quantizers (q in [0, 2^b-1]) and
+two's-complement-shifted for symmetric ones (q + 2^(b-1), still unsigned).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant_config import QuantConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QTensor:
+    codes: jax.Array  # int8 storage (possibly nibble-packed)
+    scale: jax.Array  # float32, broadcastable to logical shape
+    zero: jax.Array   # float32, broadcastable to logical shape
+    shape: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    packed: bool = dataclasses.field(metadata=dict(static=True))
+    dtype: str = dataclasses.field(metadata=dict(static=True), default="bfloat16")
+
+    @property
+    def logical_shape(self) -> Tuple[int, ...]:
+        return self.shape
+
+    def nbytes_codes(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n // 2 if self.packed else n
+
+
+def _pack_nibbles(q: jax.Array) -> jax.Array:
+    """q: uint8 codes in [0,15]; pack pairs along axis 0."""
+    if q.shape[0] % 2 != 0:
+        raise ValueError(f"int4 packing needs even dim0, got {q.shape}")
+    lo = q[0::2]
+    hi = q[1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def _unpack_nibbles(p: jax.Array) -> jax.Array:
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    out = jnp.stack([lo, hi], axis=1)  # (n/2, 2, ...)
+    return out.reshape((p.shape[0] * 2,) + p.shape[1:])
+
+
+def from_codes(q_float: jax.Array, scale: jax.Array, zero: jax.Array,
+               qcfg: QuantConfig, dtype=jnp.bfloat16) -> QTensor:
+    """Build a QTensor from float codes in [qmin, qmax] (observer output)."""
+    q = jnp.round(q_float)
+    offset = 0 if not qcfg.symmetric else -qcfg.qmin  # shift symmetric to unsigned
+    qu = (q + offset).astype(jnp.uint8)
+    packed = qcfg.bits <= 4 and q_float.shape[0] % 2 == 0
+    codes = _pack_nibbles(qu) if packed else qu
+    return QTensor(
+        codes=codes,
+        scale=jnp.asarray(scale, jnp.float32),
+        zero=jnp.asarray(zero + offset, jnp.float32),
+        shape=tuple(q_float.shape),
+        bits=qcfg.bits,
+        packed=packed,
+        dtype=jnp.dtype(dtype).name,
+    )
+
+
+def dequantize_qtensor(qt: QTensor) -> jax.Array:
+    q = _unpack_nibbles(qt.codes) if qt.packed else qt.codes
+    w = qt.scale * (q.astype(jnp.float32) - qt.zero)
+    return w.astype(jnp.dtype(qt.dtype))

@@ -1,0 +1,120 @@
+"""Quantization configuration objects.
+
+Terminology follows the FlexRound paper (ICML 2023):
+  - ``s1``: quantization grid size (scalar per-tensor, or per-channel vector).
+  - asymmetric quantization uses an integer zero point ``z``.
+  - granularity ``per_channel`` means one (s1, z) pair per *output* channel,
+    which for our JAX weight convention ``W[d_in, d_out]`` is the last axis.
+
+Paper recipes expressed with these configs:
+  vision W4/W3/W2 .... QuantConfig(bits=b, symmetric=True,  granularity="per_tensor")
+  LM W8A8 ............ QuantConfig(bits=8, symmetric=False, granularity="per_tensor")
+  LLaMA weights ...... QuantConfig(bits=8|4|3, symmetric=False, granularity="per_channel")
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+GRANULARITIES = ("per_tensor", "per_channel")
+OBSERVERS = ("minmax", "mse")
+METHODS = ("rtn", "adaround", "adaquant", "flexround")
+SETTINGS = ("brecq", "qdrop")  # activation handling during reconstruction
+RECON_UNITS = ("layer", "block")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static description of one uniform affine quantizer."""
+
+    bits: int = 8
+    symmetric: bool = False
+    granularity: str = "per_tensor"
+    channel_axis: int = -1  # output-channel axis of the tensor being quantized
+    observer: str = "mse"
+    # Leading axes treated as independent sub-tensors (e.g. stacked MoE expert
+    # weights (E, d_in, d_out) with batch_dims=1 get per-expert scales).
+    batch_dims: int = 0
+
+    def __post_init__(self):
+        if self.granularity not in GRANULARITIES:
+            raise ValueError(f"granularity {self.granularity!r} not in {GRANULARITIES}")
+        if self.observer not in OBSERVERS:
+            raise ValueError(f"observer {self.observer!r} not in {OBSERVERS}")
+        if not (2 <= self.bits <= 8):
+            raise ValueError(f"bits must be in [2, 8], got {self.bits}")
+
+    @property
+    def qmin(self) -> int:
+        if self.symmetric:
+            return -(2 ** (self.bits - 1) - 1)
+        return 0
+
+    @property
+    def qmax(self) -> int:
+        if self.symmetric:
+            return 2 ** (self.bits - 1) - 1
+        return 2**self.bits - 1
+
+    @property
+    def n_levels(self) -> int:
+        return self.qmax - self.qmin + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantRecipe:
+    """A full PTQ run description (paper section 4 experimental setups)."""
+
+    method: str = "flexround"
+    setting: str = "qdrop"
+    recon: str = "block"
+
+    w_bits: int = 8
+    w_symmetric: bool = False
+    w_granularity: str = "per_tensor"
+    w_observer: str = "mse"
+
+    a_bits: Optional[int] = 8  # None => weight-only quantization
+    a_symmetric: bool = False
+
+    iters: int = 500
+    lr: float = 3e-3
+    lr_lsq: float = 4e-5
+    batch_size: int = 8
+    drop_prob: float = 0.5  # QDrop: probability of *dropping* activation quant
+    seed: int = 0
+
+    # AdaRound regularizer schedule (Nagel et al. 2020 defaults)
+    ada_lambda: float = 0.01
+    ada_beta_start: float = 20.0
+    ada_beta_end: float = 2.0
+    ada_warmup: float = 0.2
+
+    # gradient compression for cross-pod all-reduce during reconstruction
+    grad_compress: bool = False
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"method {self.method!r} not in {METHODS}")
+        if self.setting not in SETTINGS:
+            raise ValueError(f"setting {self.setting!r} not in {SETTINGS}")
+        if self.recon not in RECON_UNITS:
+            raise ValueError(f"recon {self.recon!r} not in {RECON_UNITS}")
+
+    def weight_qconfig(self) -> QuantConfig:
+        return QuantConfig(
+            bits=self.w_bits,
+            symmetric=self.w_symmetric,
+            granularity=self.w_granularity,
+            observer=self.w_observer,
+        )
+
+    def act_qconfig(self) -> Optional[QuantConfig]:
+        if self.a_bits is None:
+            return None
+        return QuantConfig(
+            bits=self.a_bits,
+            symmetric=self.a_symmetric,
+            granularity="per_tensor",
+            observer="minmax",
+        )

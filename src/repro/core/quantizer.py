@@ -1,0 +1,68 @@
+"""Uniform affine quantization primitives with straight-through estimators.
+
+Conventions
+-----------
+- quantize:   q = clip(round(w / s) + z, qmin, qmax)       (integer code)
+- dequantize: ŵ = s * (q - z)
+- ``s`` (scale / grid size) broadcasts against ``w``; per-channel scales have
+  shape 1 everywhere except the channel axis.
+- All quant math runs in float32 regardless of input dtype; fake-quant returns
+  the input dtype.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant_config import QuantConfig
+
+
+def ste_round(x: jax.Array) -> jax.Array:
+    """round-to-nearest-even with identity gradient (straight-through)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def ste_clip(x: jax.Array, lo, hi) -> jax.Array:
+    """clip with identity gradient (used where the paper's STE passes through)."""
+    return x + jax.lax.stop_gradient(jnp.clip(x, lo, hi) - x)
+
+
+def grad_scale(x: jax.Array, g) -> jax.Array:
+    """Forward identity; scales the gradient by ``g`` (LSQ trick)."""
+    return x * g + jax.lax.stop_gradient(x - x * g)
+
+
+def scale_shape(shape: Tuple[int, ...], qcfg: QuantConfig) -> Tuple[int, ...]:
+    keep = set(range(qcfg.batch_dims))
+    if qcfg.granularity == "per_channel":
+        keep.add(qcfg.channel_axis % len(shape))
+    return tuple(shape[i] if i in keep else 1 for i in range(len(shape)))
+
+
+def reduce_axes(shape: Tuple[int, ...], qcfg: QuantConfig) -> Tuple[int, ...]:
+    """Axes to reduce over when computing per-scale statistics."""
+    keep = set(range(qcfg.batch_dims))
+    if qcfg.granularity == "per_channel":
+        keep.add(qcfg.channel_axis % len(shape))
+    return tuple(i for i in range(len(shape)) if i not in keep)
+
+
+def quantize(w: jax.Array, scale: jax.Array, zero: jax.Array, qcfg: QuantConfig,
+             ste: bool = True) -> jax.Array:
+    """Float integer codes in [qmin, qmax]; differentiable via STE if asked."""
+    w32 = w.astype(jnp.float32)
+    rnd = ste_round if ste else jnp.round
+    q = rnd(w32 / scale) + zero
+    return jnp.clip(q, qcfg.qmin, qcfg.qmax)
+
+
+def dequantize(q: jax.Array, scale: jax.Array, zero: jax.Array) -> jax.Array:
+    return scale * (q.astype(jnp.float32) - zero)
+
+
+def fake_quant(w: jax.Array, scale: jax.Array, zero: jax.Array,
+               qcfg: QuantConfig, ste: bool = True) -> jax.Array:
+    q = quantize(w, scale, zero, qcfg, ste=ste)
+    return dequantize(q, scale, zero).astype(w.dtype)

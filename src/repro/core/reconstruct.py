@@ -1,0 +1,313 @@
+"""Block/layer-wise PTQ reconstruction engine (paper §3.1, §4).
+
+Implements the sequential reconstruction the paper uses everywhere:
+
+  for each block B (transformer layer, or single linear for layer-wise):
+      y_fp = B_fp(x_fp)                      # teacher on the fp stream
+      learn rounding states minimizing ||y_fp - B_q(x_q)||^2 (+AdaRound reg)
+      finalize B -> integer weights; advance both streams
+
+``x_fp`` is the full-precision activation stream; ``x_q`` the stream produced
+by already-quantized predecessors (the X̃ of Eq. ||WX - Ŵ X̃||). Activation
+quantizers (LSQ) are initialized from the student stream and co-trained with
+the rounding states (paper: LSQ technique for the activation step size).
+
+Distribution: all jitted functions here are pjit-compatible — calibration
+tensors carry a leading sample axis that the caller shards over the data mesh
+axis; gradients reduce via the standard pjit psum. Per-block state is
+checkpointed (see repro/checkpoint) so a failed node restarts at the block
+boundary; see quantize_blocks(resume_dir=...).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lsq, methods
+from repro.core import paths as pth
+from repro.core.context import QuantCtx
+from repro.core.quant_config import QuantRecipe
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+
+
+@dataclasses.dataclass
+class Site:
+    """One quantizable weight inside a block."""
+    path: Tuple  # path of the leaf within the block's param subtree
+    kind: str = "linear"  # linear | conv
+    batch_dims: int = 0
+
+
+@dataclasses.dataclass
+class BlockHandle:
+    """A reconstruction unit: params + apply(params, x, ctx) -> y."""
+    name: str
+    params: Any
+    apply: Callable[[Any, jax.Array, QuantCtx], jax.Array]
+    sites: Dict[str, Site]
+
+
+@dataclasses.dataclass
+class BlockReport:
+    name: str
+    err_before: float
+    err_after: float
+    iters: int
+    seconds: float
+
+
+def _qcfg_for(recipe: QuantRecipe, site: Site):
+    import dataclasses as dc
+    c = recipe.weight_qconfig()
+    return dc.replace(c, batch_dims=site.batch_dims) if site.batch_dims else c
+
+
+def init_wstates(block: BlockHandle, recipe: QuantRecipe) -> Dict[str, Any]:
+    method = methods.get(recipe.method)
+    out = {}
+    for name, site in block.sites.items():
+        w = pth.get_path(block.params, site.path)
+        out[name] = method.init(w, _qcfg_for(recipe, site))
+    return out
+
+
+def init_astates(block: BlockHandle, recipe: QuantRecipe, x_q: jax.Array,
+                 prev: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """LSQ init from observed ranges on the student stream (eager pass)."""
+    aq = recipe.act_qconfig()
+    if aq is None:
+        return {}
+    ctx = QuantCtx(mode="calib", recipe=recipe)
+    block.apply(block.params, x_q, ctx)
+    states = dict(prev or {})
+    for name, (lo, hi) in ctx.records.items():
+        sample = jnp.asarray([lo, hi], jnp.float32)
+        states[name] = lsq.init(sample, aq)
+    return states
+
+
+def _trainable_mask(wstates, astates, recipe: QuantRecipe):
+    method = methods.get(recipe.method)
+    wmask = {k: method.trainable(v) for k, v in wstates.items()}
+    amask = {k: lsq.trainable(v) for k, v in astates.items()}
+    return wmask, amask
+
+
+def _apply_mask(grads, mask):
+    return jax.tree.map(lambda g, m: g if m else jnp.zeros_like(g), grads, mask)
+
+
+def make_recon_step(block: BlockHandle, recipe: QuantRecipe,
+                    w_opt_cfg: AdamConfig, a_opt_cfg: AdamConfig):
+    """Builds the jitted (wstates, astates, opts, batch, step, key) -> ... fn."""
+    method = methods.get(recipe.method)
+
+    def loss_fn(wstates, astates, x_q, y_fp, step, key):
+        ctx = QuantCtx(mode="recon", recipe=recipe, wstates=wstates,
+                       astates=astates, key=key)
+        y = block.apply(block.params, x_q, ctx)
+        mse = jnp.mean(jnp.square(y.astype(jnp.float32) - y_fp.astype(jnp.float32)))
+        reg = jnp.float32(0.0)
+        for name, st in wstates.items():
+            reg = reg + method.loss_extra(st, _qcfg_for(recipe, block.sites[name]),
+                                          step, recipe)
+        return mse + reg, mse
+
+    def step_fn(wstates, astates, wopt, aopt, x_q, y_fp, step, key):
+        (loss, mse), (gw, ga) = jax.value_and_grad(loss_fn, argnums=(0, 1),
+                                                   has_aux=True)(
+            wstates, astates, x_q, y_fp, step, key)
+        wmask, amask = _trainable_mask(wstates, astates, recipe)
+        gw = _apply_mask(gw, wmask)
+        wstates, wopt, _ = adam_update(gw, wopt, wstates, w_opt_cfg)
+        wstates = {k: method.project(v) for k, v in wstates.items()}
+        if astates:
+            ga = _apply_mask(ga, amask)
+            astates, aopt, _ = adam_update(ga, aopt, astates, a_opt_cfg)
+            astates = {k: lsq.project(v) for k, v in astates.items()}
+        return wstates, astates, wopt, aopt, loss, mse
+
+    # NOTE: no donation — rounding states are small, and JAX constant-dedup
+    # can alias identical init buffers (e.g. zero points) across sites, which
+    # makes donation reject with "same buffer twice".
+    return jax.jit(step_fn)
+
+
+def recon_error(block: BlockHandle, recipe: QuantRecipe, wstates, astates,
+                x_q, y_fp) -> float:
+    ctx = QuantCtx(mode="recon", recipe=recipe, wstates=wstates, astates=astates,
+                   key=jax.random.key(recipe.seed), drop_enabled=False)
+    y = block.apply(block.params, x_q, ctx)
+    return float(jnp.mean(jnp.square(y.astype(jnp.float32) - y_fp.astype(jnp.float32))))
+
+
+def reconstruct_block(block: BlockHandle, recipe: QuantRecipe, x_q: jax.Array,
+                      y_fp: jax.Array, key: jax.Array,
+                      astates: Optional[Dict[str, Any]] = None,
+                      ) -> Tuple[Dict[str, Any], Dict[str, Any], BlockReport]:
+    """Optimize rounding (+LSQ) states for one block. Returns final states."""
+    t0 = time.time()
+    wstates = init_wstates(block, recipe)
+    astates = astates if astates is not None else init_astates(block, recipe, x_q)
+    err0 = recon_error(block, recipe, wstates, astates, x_q, y_fp)
+
+    w_opt_cfg = AdamConfig(lr=recipe.lr)
+    a_opt_cfg = AdamConfig(lr=recipe.lr_lsq)
+    wopt = adam_init(wstates, w_opt_cfg)
+    aopt = adam_init(astates, a_opt_cfg)
+    step_fn = make_recon_step(block, recipe, w_opt_cfg, a_opt_cfg)
+
+    n = x_q.shape[0]
+    bs = min(recipe.batch_size, n)
+
+    @jax.jit
+    def sample(key):
+        return jax.random.choice(key, n, (bs,), replace=False)
+
+    for it in range(recipe.iters):
+        key, k1, k2 = jax.random.split(key, 3)
+        idx = sample(k1)
+        xb = jnp.take(x_q, idx, axis=0)
+        yb = jnp.take(y_fp, idx, axis=0)
+        wstates, astates, wopt, aopt, loss, mse = step_fn(
+            wstates, astates, wopt, aopt, xb, yb, jnp.int32(it), k2)
+
+    err1 = recon_error(block, recipe, wstates, astates, x_q, y_fp)
+    rep = BlockReport(block.name, err0, err1, recipe.iters, time.time() - t0)
+    return wstates, astates, rep
+
+
+def finalize_block(block: BlockHandle, recipe: QuantRecipe, wstates,
+                   as_qtensor: bool = True) -> Any:
+    """Replace quantized leaves with QTensor (deploy) or dequant arrays."""
+    from repro.core.qtensor import dequantize_qtensor
+    method = methods.get(recipe.method)
+    params = block.params
+    for name, site in block.sites.items():
+        w = pth.get_path(params, site.path)
+        qt = method.export(w, wstates[name], _qcfg_for(recipe, site), dtype=w.dtype)
+        params = pth.set_path(params, site.path, qt if as_qtensor else
+                              dequantize_qtensor(qt))
+    return params
+
+
+# --------------------------------------------------------------------- driver
+def _teacher_fn(block: BlockHandle):
+    return jax.jit(lambda p, x: block.apply(p, x, QuantCtx(mode="fp")))
+
+
+def _student_fn(block: BlockHandle, recipe: QuantRecipe):
+    def f(p, x, astates):
+        ctx = QuantCtx(mode="deploy", recipe=recipe, astates=astates)
+        return block.apply(p, x, ctx)
+    return jax.jit(f)
+
+
+def _explode_layerwise(block: BlockHandle, recipe: QuantRecipe, x_q):
+    """Yield per-site sub-blocks for recon='layer' (AdaRound-style).
+
+    Each site becomes a standalone linear/conv reconstruction problem whose
+    inputs are captured from the (partially quantized) block execution.
+    """
+    for name, site in block.sites.items():
+        ctx_q = QuantCtx(mode="capture", recipe=recipe)
+        block.apply(block.params, x_q, ctx_q)
+        x_site = ctx_q.records[name][0]
+        w = pth.get_path(block.params, site.path)
+
+        if site.kind == "conv":
+            def apply_fn(p, x, ctx, _n=name):
+                return ctx.conv2d(_n, x, p["w"])
+        elif site.batch_dims:
+            def apply_fn(p, x, ctx, _n=name, _bd=site.batch_dims):
+                return ctx.linear(_n, x, p["w"], batch_dims=_bd)
+        else:
+            def apply_fn(p, x, ctx, _n=name):
+                return ctx.linear(_n, x, p["w"])
+
+        sub = BlockHandle(name=f"{block.name}/{name}", params={"w": w},
+                          apply=apply_fn,
+                          sites={name: Site(path=("w",), kind=site.kind,
+                                            batch_dims=site.batch_dims)})
+        yield name, site, sub, x_site
+
+
+def quantize_blocks(blocks: List[BlockHandle], recipe: QuantRecipe,
+                    x0: jax.Array, key: Optional[jax.Array] = None,
+                    as_qtensor: bool = True,
+                    checkpoint_dir: Optional[str] = None,
+                    progress: Optional[Callable[[str], None]] = None,
+                    ) -> Tuple[List[Any], Dict[str, Any], List[BlockReport]]:
+    """Sequentially quantize a chain of blocks (the paper's full procedure).
+
+    Returns (per-block finalized params, astates, reports). If
+    ``checkpoint_dir`` is set, per-block state is saved after each block and
+    a crashed run resumes at the first un-finalized block.
+    """
+    key = key if key is not None else jax.random.key(recipe.seed)
+    ckpt = None
+    if checkpoint_dir is not None:
+        from repro.checkpoint.checkpoint import PTQCheckpointer
+        ckpt = PTQCheckpointer(checkpoint_dir)
+
+    x_fp = x0
+    x_q = x0
+    astates: Dict[str, Any] = {}
+    finalized: List[Any] = []
+    reports: List[BlockReport] = []
+
+    start = 0
+    if ckpt is not None:
+        resumed = ckpt.load(blocks, recipe)
+        if resumed is not None:
+            start, finalized, astates, reports, x_fp, x_q = resumed
+
+    for i in range(len(blocks)):
+        block = blocks[i]
+        teacher = _teacher_fn(block)
+        y_fp = teacher(block.params, x_fp)
+        if i < start:
+            # replay streams from checkpointed finalized params
+            x_q = _student_fn(block, recipe)(finalized[i], x_q, astates)
+            x_fp = y_fp
+            continue
+        key, bkey = jax.random.split(key)
+        astates = init_astates(block, recipe, x_q, prev=astates)
+
+        if recipe.recon == "layer":
+            wstates_all: Dict[str, Any] = {}
+            params_cur = block.params
+            cur = BlockHandle(block.name, params_cur, block.apply, block.sites)
+            for name, site, sub, x_site in _explode_layerwise(cur, recipe, x_q):
+                y_site = _teacher_fn(sub)(sub.params, x_site)
+                ws, a_sub, rep = reconstruct_block(sub, recipe, x_site, y_site,
+                                                   bkey, astates=dict(astates))
+                astates.update(a_sub)
+                wstates_all[name] = ws[name]
+                reports.append(rep)
+                params_cur = pth.set_path(
+                    params_cur, site.path,
+                    pth.get_path(finalize_block(sub, recipe, ws,
+                                                as_qtensor=False), ("w",)))
+                cur = BlockHandle(block.name, params_cur, block.apply, block.sites)
+            wstates = wstates_all
+        else:
+            wstates, astates, rep = reconstruct_block(block, recipe, x_q, y_fp,
+                                                      bkey, astates=astates)
+            reports.append(rep)
+
+        new_params = finalize_block(block, recipe, wstates, as_qtensor=as_qtensor)
+        finalized.append(new_params)
+        x_q = _student_fn(block, recipe)(new_params, x_q, astates)
+        x_fp = y_fp
+        if progress:
+            progress(f"[{i + 1}/{len(blocks)}] {block.name} "
+                     f"err {reports[-1].err_before:.3e} -> {reports[-1].err_after:.3e}")
+        if ckpt is not None:
+            ckpt.save(i + 1, finalized, astates, reports, x_fp, x_q)
+
+    return finalized, astates, reports

@@ -1,0 +1,42 @@
+"""Round-to-nearest (RTN): the no-learning PTQ baseline.
+
+    Ŵ = s1 * ( clip( round(W / s1) + z, qmin, qmax ) - z )
+
+with s1/z from the observer. Nothing is learnable.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import observers, qtensor
+from repro.core import quantizer as qz
+from repro.core.quant_config import QuantConfig
+
+
+def init(w: jax.Array, qcfg: QuantConfig, key=None) -> Dict[str, jax.Array]:
+    scale, zero = observers.init_scale(w, qcfg)
+    return {"s1": scale.astype(jnp.float32), "zero": zero.astype(jnp.float32)}
+
+
+def apply(w: jax.Array, state: Dict[str, jax.Array], qcfg: QuantConfig) -> jax.Array:
+    return qz.fake_quant(w, state["s1"], state["zero"], qcfg, ste=True)
+
+
+def loss_extra(state, qcfg, step, recipe) -> jax.Array:
+    return jnp.float32(0.0)
+
+
+def trainable(state: Dict[str, jax.Array]) -> Dict[str, bool]:
+    return {k: False for k in state}
+
+
+def project(state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    return state
+
+
+def export(w, state, qcfg: QuantConfig, dtype=jnp.bfloat16) -> qtensor.QTensor:
+    q = qz.quantize(w, state["s1"], state["zero"], qcfg, ste=False)
+    return qtensor.from_codes(q, state["s1"], state["zero"], qcfg, dtype=dtype)

@@ -1,0 +1,122 @@
+"""Data pipeline: synthetic token streams + calibration sets.
+
+The paper's PTQ needs only a small calibration sample (128-1024 sequences);
+pretraining the small example models needs a token stream. Both are built on
+a deterministic counter-based RNG so any host can materialize exactly its
+shard for any step — the property that makes restart/elastic-scale trivial:
+
+    batch(step, host, n_hosts) is a pure function.
+
+Straggler mitigation: ``assemble_global_batch`` takes per-host fetch results
+with a deadline; missing shards are dropped and the loss weight rescaled
+(simulated single-host here; the policy + math are the real thing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _key(seed: int, *fold: int) -> jax.Array:
+    k = jax.random.key(seed)
+    for f in fold:
+        k = jax.random.fold_in(k, f)
+    return k
+
+
+class SyntheticTokens:
+    """Markov-ish synthetic corpus: learnable but non-trivial structure.
+
+    Tokens follow t_{i+1} = (a * t_i + b + noise) mod V with per-sequence
+    (a, b) drawn from a small set — a model must use context to predict,
+    so cross-entropy meaningfully separates fp vs quantized models.
+    """
+
+    def __init__(self, vocab: int, seq_len: int, seed: int = 0,
+                 n_modes: int = 8):
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.seed = seed
+        self.n_modes = n_modes
+
+    def batch(self, step: int, batch_size: int, host: int = 0,
+              n_hosts: int = 1) -> Dict[str, jax.Array]:
+        """Deterministic global batch shard for (step, host)."""
+        assert batch_size % n_hosts == 0
+        local = batch_size // n_hosts
+        k = _key(self.seed, step, host)
+        ka, kb, kt, kn = jax.random.split(k, 4)
+        a = jax.random.randint(ka, (local, 1), 1, self.n_modes + 1)
+        b = jax.random.randint(kb, (local, 1), 0, self.vocab)
+        t0 = jax.random.randint(kt, (local, 1), 0, self.vocab)
+        noise = jax.random.randint(kn, (local, self.seq_len + 1), 0, 3)
+        idx = jnp.arange(self.seq_len + 1)[None, :]
+        # closed form of the affine recurrence keeps generation vectorized
+        toks = jnp.mod(t0 * jnp.power(a, idx)
+                       + b * idx + jnp.cumsum(noise, axis=1), self.vocab)
+        toks = toks.astype(jnp.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+@dataclasses.dataclass
+class CalibrationSet:
+    """The paper's calibration sample: N random sequences from the 'training
+    distribution' (synthetic here), fixed once per PTQ run."""
+
+    tokens: jax.Array  # (N, S)
+
+    @staticmethod
+    def build(source: SyntheticTokens, n_samples: int, seed: int = 1234
+              ) -> "CalibrationSet":
+        per = max(1, n_samples // 4)
+        batches = [source.batch(10_000 + i, per)["tokens"]
+                   for i in range((n_samples + per - 1) // per)]
+        toks = jnp.concatenate(batches, axis=0)[:n_samples]
+        return CalibrationSet(tokens=toks)
+
+    def __len__(self):
+        return int(self.tokens.shape[0])
+
+
+# -------------------------------------------------------------- stragglers
+@dataclasses.dataclass(frozen=True)
+class StragglerPolicy:
+    """Deadline-based shard dropping for global batch assembly."""
+
+    deadline_ms: float = 100.0
+    min_fraction: float = 0.75  # below this, wait anyway (quality floor)
+
+
+def assemble_global_batch(shards: Sequence[Optional[Dict[str, np.ndarray]]],
+                          policy: StragglerPolicy
+                          ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Combine per-host shards; None = host missed the deadline.
+
+    Returns (batch, weight) where missing shards are zero-filled and
+    ``weight`` (B,) masks them out; callers rescale the loss by
+    B / weight.sum() so gradient magnitude is unbiased.
+    """
+    present = [s for s in shards if s is not None]
+    if not present:
+        raise RuntimeError("all shards missed the deadline")
+    frac = len(present) / len(shards)
+    if frac < policy.min_fraction:
+        raise TimeoutError(
+            f"only {frac:.0%} of shards arrived (< {policy.min_fraction:.0%})")
+    proto = present[0]
+    out: Dict[str, List[np.ndarray]] = {k: [] for k in proto}
+    weights = []
+    for s in shards:
+        use = s if s is not None else {k: np.zeros_like(v)
+                                       for k, v in proto.items()}
+        for k in proto:
+            out[k].append(use[k])
+        weights.append(np.full((proto["tokens"].shape[0],),
+                               0.0 if s is None else 1.0, np.float32))
+    batch = {k: jnp.concatenate([jnp.asarray(v) for v in vs], axis=0)
+             for k, vs in out.items()}
+    return batch, jnp.concatenate([jnp.asarray(w) for w in weights])

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: W4A16 dequant-matmul (weight-only int4 serving).
+
+Weights are nibble-packed uint8 (two 4-bit codes per byte along K). Each K
+tile is unpacked and dequantized *in VMEM* right before the MXU matmul, so
+HBM traffic for the weight is 0.5 bytes/element — the memory-roofline win
+that makes int4 decode ~4x lighter than bf16 (see EXPERIMENTS.md §Perf).
+
+    out[M, N] = x[M, K] @ (scale * (unpack(codes)[K, N] - zero))
+
+Grid (M/bm, N/bn, K/bk); float32 VMEM accumulator across K steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, c_ref, scale_ref, zero_ref, o_ref, acc_ref, *, k_steps):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = c_ref[...]  # (bk//2, bn) uint8
+    lo = (codes & 0xF).astype(jnp.float32)
+    hi = ((codes >> 4) & 0xF).astype(jnp.float32)
+    bk2, bn = codes.shape
+    q = jnp.stack([lo, hi], axis=1).reshape(bk2 * 2, bn)
+    w = scale_ref[...] * (q - zero_ref[...])  # dequant in VMEM
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "out_dtype", "interpret"))
+def dequant_matmul_w4(x, codes, scale, zero, *, block_m: int = 128,
+                      block_n: int = 128, block_k: int = 512,
+                      out_dtype=None, interpret: bool = False):
+    """x (M, K); codes (K//2, N) uint8; scale/zero (1, N) or (1, 1)."""
+    M, K = x.shape
+    N = codes.shape[1]
+    assert codes.shape[0] * 2 == K, "codes must be K/2 nibble-packed rows"
+    out_dtype = out_dtype or x.dtype
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    assert block_k % 2 == 0
+    # pad to block multiples (zero-padded x rows/K cols contribute nothing)
+    Mp, Kp, Np = (-M % block_m, -K % block_k, -N % block_n)
+    x = jnp.pad(x, ((0, Mp), (0, Kp)))
+    codes = jnp.pad(codes, ((0, Kp // 2), (0, Np)))
+    scale = jnp.pad(jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (1, N)),
+                    ((0, 0), (0, Np)))
+    zero = jnp.pad(jnp.broadcast_to(jnp.asarray(zero, jnp.float32), (1, N)),
+                   ((0, 0), (0, Np)))
+    Mf, Kf, Nf = M + Mp, K + Kp, N + Np
+    k_steps = Kf // block_k
+    grid = (Mf // block_m, Nf // block_n, k_steps)
+    out = pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k // 2, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mf, Nf), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, codes, scale, zero)
+    return out[:M, :N]

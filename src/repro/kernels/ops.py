@@ -1,0 +1,68 @@
+"""jit'd public wrappers for the Pallas kernels, with QTensor integration
+and an XLA fallback (``backend='xla'`` routes to the ref implementation —
+used by the dry-run, which compiles for the CPU backend).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import QTensor
+from repro.kernels import ref
+from repro.kernels.dequant_matmul_w4 import dequant_matmul_w4
+from repro.kernels.flexround_quant import flexround_quant
+from repro.kernels.qmatmul_int8 import qmatmul_int8
+
+
+def flexround_fake_quant(w, state, qcfg, *, interpret: bool = True,
+                         backend: str = "pallas"):
+    """Kernel-backed equivalent of core.flexround.apply (no STE — forward
+    only; the training path keeps the jnp version for autodiff)."""
+    s1 = jnp.broadcast_to(state["s1"].astype(jnp.float32), (1, w.shape[-1]))
+    s3 = state["s3"].reshape(1, -1) if state["s3"].shape[-1] == w.shape[-1] \
+        else jnp.broadcast_to(state["s3"].astype(jnp.float32), (1, w.shape[-1]))
+    zero = jnp.broadcast_to(state["zero"].astype(jnp.float32), (1, w.shape[-1]))
+    if backend == "xla":
+        return ref.flexround_quant_ref(w, s1, state["s2"], s3, zero,
+                                       qcfg.qmin, qcfg.qmax)
+    return flexround_quant(w, s1, state["s2"], s3, zero, qmin=qcfg.qmin,
+                           qmax=qcfg.qmax, interpret=interpret)
+
+
+def qtensor_matmul(x, qt: QTensor, *, a_state=None, interpret: bool = True,
+                   backend: str = "pallas"):
+    """x @ dequant(qt) for 2-D QTensors.
+
+    - 4-bit packed weights -> W4A16 dequant-matmul kernel.
+    - 8-bit weights + a_state (activation int8 params) -> W8A8 int kernel.
+    - 8-bit weights, no a_state -> dequant + bf16 matmul (weight-only int8).
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    scale = jnp.broadcast_to(qt.scale, (1, qt.shape[-1])).astype(jnp.float32)
+    zero = jnp.broadcast_to(qt.zero, (1, qt.shape[-1])).astype(jnp.float32)
+    if qt.packed:
+        if backend == "xla":
+            out = ref.dequant_matmul_w4_ref(x2, qt.codes, scale, zero)
+        else:
+            out = dequant_matmul_w4(x2, qt.codes, scale, zero,
+                                    interpret=interpret)
+    elif a_state is not None:
+        # dynamic per-tensor activation quantization to int8
+        a_scale, a_zero = a_state
+        a_q = jnp.clip(jnp.round(x2.astype(jnp.float32) / a_scale) + a_zero,
+                       0, 255) - 128  # shift to signed
+        a_q = a_q.astype(jnp.int8)
+        b_q = (qt.codes.astype(jnp.int32) - jnp.round(qt.zero).astype(jnp.int32)
+               ).astype(jnp.int8)
+        if backend == "xla":
+            out = ref.qmatmul_int8_ref(a_q, b_q, a_scale, a_zero - 128.0,
+                                       scale)
+        else:
+            out = qmatmul_int8(a_q, b_q, a_scale, a_zero - 128.0, scale,
+                               interpret=interpret)
+        out = out.astype(x.dtype)
+    else:
+        from repro.core.qtensor import dequantize_qtensor
+        out = x2 @ dequantize_qtensor(qt).astype(x2.dtype)
+    return out.reshape(lead + (qt.shape[-1],)).astype(x.dtype)

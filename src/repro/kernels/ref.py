@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flexround_quant_ref(w, s1, s2, s3, zero, qmin: int, qmax: int):
+    """Fused FlexRound quantize: Ŵ = s1*(clip(round(W/(s1*s2*s3))+z) - z).
+
+    w, s2: (M, N); s1, s3, zero: (1, N) broadcastable (per-channel) or (1, 1).
+    """
+    w32 = w.astype(jnp.float32)
+    q = jnp.round(w32 / (s1 * s2 * s3)) + zero
+    q = jnp.clip(q, qmin, qmax)
+    return (s1 * (q - zero)).astype(w.dtype)
+
+
+def qmatmul_int8_ref(a_q, b_q, a_scale, a_zero, b_scale, out_dtype=jnp.float32):
+    """W8A8 integer matmul.
+
+    a_q (M, K) int8 codes of activations:  a = a_scale * (a_q - a_zero)
+    b_q (K, N) int8 codes of weights:      b = b_scale * b_q   (symmetric)
+    b_scale: (1, N) per-out-channel or (1, 1).
+    """
+    acc = jnp.dot(a_q.astype(jnp.int32), b_q.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    colsum = jnp.sum(b_q.astype(jnp.int32), axis=0, keepdims=True)
+    out = a_scale * b_scale * (acc.astype(jnp.float32)
+                               - a_zero * colsum.astype(jnp.float32))
+    return out.astype(out_dtype)
+
+
+def dequant_matmul_w4_ref(x, codes, scale, zero, out_dtype=None):
+    """W4A16 matmul: x (M, K) bf16 @ dequant(codes) where codes are
+    nibble-packed (K//2, N) uint8, scale/zero (1, N) or (1, 1) float32."""
+    lo = (codes & 0xF).astype(jnp.float32)
+    hi = ((codes >> 4) & 0xF).astype(jnp.float32)
+    q = jnp.stack([lo, hi], axis=1).reshape(codes.shape[0] * 2, codes.shape[1])
+    w = scale * (q - zero)
+    out = jnp.dot(x.astype(jnp.float32), w)
+    return out.astype(out_dtype or x.dtype)

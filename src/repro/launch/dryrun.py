@@ -1,0 +1,147 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as a module:  PYTHONPATH=src python -m repro.launch.dryrun
+  --arch <id|all> --shape <id|all> [--multi-pod/--single-pod/--both]
+  [--weights int8] [--out results.json]
+
+The two XLA_FLAGS lines above execute before ANY other import (jax locks the
+device count on first init), giving 512 virtual host devices for the
+production meshes. Do NOT set this flag globally — tests/benchmarks must see
+one device.
+
+For each cell this prints/records compiled.memory_analysis() (fits-per-chip
+evidence), compiled.cost_analysis() (FLOPs/bytes for §Roofline), and the
+collective-byte summary parsed from the compiled HLO.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPE_IDS, cell_applicable, get_config, get_shape  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_cell  # noqa: E402
+from repro.roofline.analysis import analyze_compiled  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             weights: str = "int8", verbose: bool = True,
+             mode: str = None, microbatch: int = 1, kv: str = "bf16",
+             tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = cell_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}|{shape_name}|{mesh_name}|{weights}" + (
+        f"|{tag}" if tag else "")
+    if not ok:
+        return {"cell": cell_id, "status": "skipped", "reason": why}
+    t0 = time.time()
+    try:
+        from repro.models.common import ambient_mesh
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        prog = build_cell(cfg, shape, mesh, weights=weights, mode=mode,
+                          microbatch=microbatch, kv=kv)
+        with mesh, ambient_mesh(mesh):
+            lowered = jax.jit(
+                prog.fn,
+                in_shardings=prog.in_shardings,
+                out_shardings=prog.out_shardings,
+                donate_argnums=prog.donate_argnums,
+            ).lower(*prog.args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        result = {
+            "cell": cell_id,
+            "status": "ok",
+            "compile_s": round(time.time() - t0, 1),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_bytes_per_device": (mem.argument_size_in_bytes
+                                          + mem.output_size_in_bytes
+                                          + mem.temp_size_in_bytes
+                                          - mem.alias_size_in_bytes),
+            },
+            "analysis": analyze_compiled(compiled, cfg, shape, mesh,
+                                         weights=weights, mode=mode, kv=kv),
+        }
+        if verbose:
+            a = result["analysis"]
+            print(f"[OK ] {cell_id}  compile={result['compile_s']}s  "
+                  f"peak/dev={result['memory']['peak_bytes_per_device']/2**30:.2f}GiB  "
+                  f"compute={a['compute_s']:.3e}s memory={a['memory_s']:.3e}s "
+                  f"collective={a['collective_s']:.3e}s -> {a['bottleneck']}",
+                  flush=True)
+        return result
+    except Exception as e:  # noqa: BLE001 - record and continue
+        if verbose:
+            print(f"[ERR] {cell_id}: {e}", flush=True)
+            traceback.print_exc()
+        return {"cell": cell_id, "status": "error", "error": str(e),
+                "compile_s": round(time.time() - t0, 1)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--weights", default="int8",
+                    choices=["bf16", "int8", "int4"])
+    ap.add_argument("--mode", default=None,
+                    choices=[None, "dp", "tp", "fsdp"],
+                    help="override the per-arch parallelism mode")
+    ap.add_argument("--kv", default="bf16", choices=["bf16", "int8"],
+                    help="KV-cache precision for serve cells")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--tag", default="", help="suffix for the cell id")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = SHAPE_IDS if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    if args.append and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {r["cell"] for r in results if r.get("status") == "ok"}
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                cid = f"{arch}|{shape}|{mesh_name}|{args.weights}" + (
+                    f"|{args.tag}" if args.tag else "")
+                if cid in done:
+                    print(f"[SKIP cached] {cid}", flush=True)
+                    continue
+                results.append(run_cell(arch, shape, multi_pod=mp,
+                                        weights=args.weights, mode=args.mode,
+                                        microbatch=args.microbatch,
+                                        kv=args.kv, tag=args.tag))
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skipped (per assignment), "
+          f"{n_err} errors -> {args.out}", flush=True)
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

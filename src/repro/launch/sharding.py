@@ -1,0 +1,206 @@
+"""Per-architecture sharding rules (DP / FSDP / TP / EP / SP).
+
+Specs are derived from *shape trees* (jax.eval_shape) so no memory is touched.
+Every rule validates divisibility against the actual mesh — jit input
+shardings reject uneven dims — and degrades an axis to replication when a dim
+doesn't divide (e.g. granite's 49155 vocab, mamba's fused projection).
+
+Parallelism modes per arch (see DESIGN.md §4):
+  dp    params replicated, batch over data axes (small models)
+  tp    tensor parallel over 'model' (2-10B)
+  fsdp  tp + parameters/optimizer sharded over data axes too (>=14B)
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import axis_size, dp_axes
+
+ARCH_MODE = {
+    "qwen2.5-14b": "fsdp",
+    "smollm-135m": "dp",
+    "granite-3-2b": "tp",
+    "olmo-1b": "tp",
+    "recurrentgemma-2b": "tp",
+    "llama4-scout-17b-a16e": "fsdp",
+    "deepseek-v3-671b": "fsdp",
+    "mamba2-130m": "dp",
+    "whisper-medium": "tp",
+    "phi-3-vision-4.2b": "tp",
+}
+
+# serving prefers TP everywhere: replicated weights multiply per-chip HBM
+# weight traffic by n_dev (§Perf smollm iteration: 1.43x better memory term),
+# and FSDP-sharded weights would be re-gathered every decode step (§Perf qwen
+# iteration). MoE experts keep full EP via the expert rule; deepseek's
+# non-expert weights fit on the model axis (0.8 GiB/chip int8).
+SERVE_MODE = {
+    "smollm-135m": "tp",
+    "mamba2-130m": "tp",
+    "qwen2.5-14b": "tp",
+    "llama4-scout-17b-a16e": "tp",
+    "deepseek-v3-671b": "tp",
+}
+
+
+def serve_mode(name: str) -> str:
+    return SERVE_MODE.get(name, ARCH_MODE.get(name, "tp"))
+
+_ROW_PARALLEL = re.compile(r"(wo|w_down|out_proj)$")
+_REPLICATED = re.compile(
+    r"(router|conv_w|conv_b|a_log|dt_bias|d_skip|lam|b_a|b_i|scale|bias|"
+    r"bq|bk|bv|bo|b_up|b_down)$")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return ".".join(parts)
+
+
+def _div(dim: int, mesh, axes) -> bool:
+    return axes is not None and dim % axis_size(mesh, axes) == 0
+
+
+def _matrix_spec(shape, mesh, mode: str, name: str, lead: int) -> P:
+    """Spec for a (lead..., d_in, d_out) weight matrix."""
+    dp = dp_axes(mesh)
+    d_in, d_out = shape[-2], shape[-1]
+    row = bool(_ROW_PARALLEL.search(name))
+    specs = [None] * len(shape)
+    tp_dim = len(shape) - 2 if row else len(shape) - 1
+    fs_dim = len(shape) - 1 if row else len(shape) - 2
+    if _div(shape[tp_dim], mesh, ("model",)):
+        specs[tp_dim] = "model"
+    elif _div(shape[fs_dim], mesh, ("model",)):
+        # fall back: shard the other dim over model
+        specs[fs_dim] = "model"
+        fs_dim = tp_dim
+    if mode == "fsdp" and specs[fs_dim] is None and _div(shape[fs_dim], mesh, dp):
+        specs[fs_dim] = dp
+    return P(*specs)
+
+
+def _expert_spec(shape, mesh, mode: str) -> P:
+    """(L, E, d_in, d_out) stacked expert weights.
+
+    Full EP when E divides data*model (deepseek: 256 experts over 256 chips,
+    one expert per chip => zero weight gathers; tokens move via all-to-all
+    instead — §Perf deepseek iteration 2). Otherwise EP over model (+FSDP
+    sharding of d_in over the data axes)."""
+    dp = dp_axes(mesh)
+    specs = [None] * len(shape)
+    e_dim = len(shape) - 3
+    if _div(shape[e_dim], mesh, ("data", "model")):
+        specs[e_dim] = ("data", "model")
+        return P(*specs)
+    if _div(shape[e_dim], mesh, ("model",)):
+        specs[e_dim] = "model"
+    if mode == "fsdp" and _div(shape[-2], mesh, dp):
+        specs[-2] = dp
+    return P(*specs)
+
+
+def _embed_spec(shape, mesh, mode: str, transposed: bool) -> P:
+    """embed (V, D) / lm_head (D, V): vocab-parallel when divisible."""
+    dp = dp_axes(mesh)
+    v_dim, d_dim = (1, 0) if transposed else (0, 1)
+    specs = [None, None]
+    if _div(shape[v_dim], mesh, ("model",)):
+        specs[v_dim] = "model"
+        if mode == "fsdp" and _div(shape[d_dim], mesh, dp):
+            specs[d_dim] = dp
+    elif _div(shape[d_dim], mesh, ("model",)):
+        specs[d_dim] = "model"  # odd vocab (granite/mamba/whisper)
+    return P(*specs)
+
+
+def param_spec_tree(shapes: Any, cfg, mesh, mode: Optional[str] = None) -> Any:
+    """PartitionSpec tree matching a params shape tree."""
+    mode = mode or ARCH_MODE.get(cfg.name, "tp")
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        if mode == "dp" or len(shape) <= 1:
+            return P(*([None] * len(shape)))
+        short = name.rsplit(".", 1)[-1]
+        if _REPLICATED.search(short):
+            return P(*([None] * len(shape)))
+        if short == "embed":
+            return _embed_spec(shape, mesh, mode, transposed=False)
+        if short == "lm_head":
+            return _embed_spec(shape, mesh, mode, transposed=True)
+        if ".experts." in f".{name}." and len(shape) in (3, 4):
+            return _expert_spec(shape, mesh, mode)  # (L,)E,d_in,d_out
+        if len(shape) >= 2:
+            return _matrix_spec(shape, mesh, mode, short,
+                                lead=len(shape) - 2)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+def batch_spec_tree(batch_shapes: Any, cfg, mesh) -> Any:
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        b = leaf.shape[0]
+        lead = dp if _div(b, mesh, dp) else (
+            ("data",) if _div(b, mesh, ("data",)) else None)
+        return P(lead, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shapes)
+
+
+def cache_spec_tree(cache_shapes: Any, cfg, mesh) -> Any:
+    """Decode caches: batch over data axes, SEQUENCE over model (SP decode —
+    flash-decoding style: per-shard partial attention, XLA inserts the small
+    LSE/psum collectives). Seq lens (32768/524288) always divide 16."""
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        specs = [None] * len(shape)
+        if name.endswith("kpos"):
+            return P(*specs)
+        # leading L dim for stacked caches
+        b_dim = 1 if (len(shape) >= 3 and shape[0] == cfg.n_layers) else 0
+        if _div(shape[b_dim], mesh, dp):
+            specs[b_dim] = dp
+        elif _div(shape[b_dim], mesh, ("data",)):
+            specs[b_dim] = "data"
+        # seq axis right after batch for kv/latent caches
+        s_dim = b_dim + 1
+        if (len(shape) > s_dim + 1 and
+                any(t in name for t in ("k", "v", "ckv", "kr"))
+                and _div(shape[s_dim], mesh, ("model",))):
+            specs[s_dim] = "model"
+        return P(*specs)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda l: isinstance(l, P))
+
+
+def opt_spec_tree(opt_shapes: Any, param_specs: Any) -> Any:
+    """Adam moments mirror parameter sharding; count replicated."""
+    mu = jax.tree.map(lambda ps: {"m": ps, "v": ps}, param_specs,
+                      is_leaf=lambda l: isinstance(l, P))
+    return {"mu": mu, "count": P()}

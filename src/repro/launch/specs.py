@@ -1,0 +1,106 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) cell — no allocation.
+
+Also: shape-level transformation of a params tree into its quantized-serving
+form (QTensor leaves with int8 / packed-int4 codes), mirroring exactly what
+core.reconstruct.finalize + assemble() produce at runtime.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.core.qtensor import QTensor
+from repro.models import build_model
+
+WHISPER_CROSS_LEN = 1504  # ~30s of frames, divisible by 16
+
+_QUANT_SITE = re.compile(
+    r"(wq|wk|wv|wo|w_gate|w_up|w_down|in_proj|out_proj|wq_a|wq_b|wkv_a|"
+    r"wkv_b|w_x|w_a|w_i)$")
+_STACK_KEYS = ("layers", "dense_layers", "enc_layers", "dec_layers")
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _path_parts(path):
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(p.key)
+        elif hasattr(p, "idx"):
+            parts.append(p.idx)
+    return parts
+
+
+def param_shapes(model, cfg) -> Any:
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def quantize_param_shapes(shapes: Any, cfg, bits: int = 8) -> Any:
+    """Replace quantizable weight leaves with QTensor shape-structs
+    (per-channel asymmetric grid — the paper's LLM serving recipe)."""
+
+    def rule(path, leaf):
+        parts = _path_parts(path)
+        name = ".".join(str(p) for p in parts)
+        short = str(parts[-1]) if parts else ""
+        is_expert = "experts" in parts
+        quantizable = (leaf.ndim >= 2
+                       and (_QUANT_SITE.search(short) or is_expert)
+                       and short not in ("embed", "lm_head", "router"))
+        if not quantizable:
+            return leaf
+        stacked = (isinstance(parts[0], str) and parts[0] in _STACK_KEYS
+                   and not any(isinstance(p, int) for p in parts))
+        shape = list(leaf.shape)
+        logical = tuple(shape[1:]) if stacked else tuple(shape)
+        pack_dim = 1 if stacked else 0
+        packed = bits <= 4 and shape[pack_dim] % 2 == 0
+        cshape = list(shape)
+        if packed:
+            cshape[pack_dim] //= 2
+        sshape = list(shape[:-2]) + [1, shape[-1]]
+        return QTensor(
+            codes=sds(cshape, jnp.uint8),
+            scale=sds(sshape, jnp.float32),
+            zero=sds(sshape, jnp.float32),
+            shape=logical,
+            bits=bits,
+            packed=packed,
+            dtype=cfg.dtype,
+        )
+
+    return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+def batch_shapes(cfg, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    d = jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        return {"tokens": sds((B, S), jnp.int32),
+                "labels": sds((B, S), jnp.int32),
+                "frames": sds((B, S, cfg.d_model), d)}
+    if cfg.family == "vlm":
+        S_text = S - cfg.n_patches
+        return {"tokens": sds((B, S_text), jnp.int32),
+                "labels": sds((B, S_text), jnp.int32),
+                "patch_embeds": sds((B, cfg.n_patches, cfg.d_model), d)}
+    return {"tokens": sds((B, S), jnp.int32),
+            "labels": sds((B, S), jnp.int32)}
+
+
+def cache_shapes(model, cfg, shape: ShapeSpec, kv: str = "bf16") -> Any:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return jax.eval_shape(
+            lambda: model.init_cache(B, S, enc_len=WHISPER_CROSS_LEN))
+    if kv == "int8" and cfg.family in ("dense", "moe", "vlm") \
+            and not cfg.use_mla:
+        return jax.eval_shape(lambda: model.init_cache(B, S, kv_quant=True))
+    return jax.eval_shape(lambda: model.init_cache(B, S))

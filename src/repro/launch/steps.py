@@ -1,0 +1,225 @@
+"""train_step / prefill_step / serve_step builders + cell programs.
+
+A CellProgram bundles everything the dry-run (and a real launch) needs for
+one (arch x shape x mesh) combination: the step function, ShapeDtypeStruct
+arguments, and in/out shardings. Weight modes for serving:
+
+  bf16   full-precision serving (roofline baseline)
+  int8   FlexRound-quantized weight-only (paper-faithful LLM recipe)
+  int4   packed-int4 weight-only (beyond-paper; see EXPERIMENTS.md §Perf)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.core.context import QuantCtx
+from repro.launch import sharding as shd
+from repro.launch import specs as sp
+from repro.models import build_model
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+
+TRAIN_OPT = {
+    "fsdp": AdamConfig(lr=3e-4, weight_decay=0.1, grad_clip=1.0,
+                       moment_dtype="bfloat16"),
+    "tp": AdamConfig(lr=3e-4, weight_decay=0.1, grad_clip=1.0),
+    "dp": AdamConfig(lr=3e-4, weight_decay=0.1, grad_clip=1.0),
+}
+
+
+@dataclasses.dataclass
+class CellProgram:
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def _named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda l: isinstance(l, P))
+
+
+# ------------------------------------------------------------------ train
+def make_train_step(model, cfg, opt_cfg: AdamConfig, microbatch: int = 1):
+    """microbatch > 1: gradient accumulation over a lax.scan of microbatches
+    — cuts peak activation memory ~microbatch-x at the same math (standard
+    1000-node practice; see EXPERIMENTS.md §Perf train iteration)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, QuantCtx(mode="fp"))
+        return loss, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatch == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            split = jax.tree.map(
+                lambda x: x.reshape((microbatch, x.shape[0] // microbatch)
+                                    + x.shape[1:]), batch)
+
+            def micro(gacc, mb):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    gacc, g)
+                return gacc, l
+
+            gacc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(micro, gacc0, split)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = jnp.mean(losses)
+            metrics = {}
+        new_params, new_opt, gnorm = adam_update(grads, state["opt"],
+                                                 params, opt_cfg)
+        out = {"params": new_params, "opt": new_opt,
+               "step": state["step"] + 1}
+        return out, {"loss": loss, "gnorm": gnorm, **metrics}
+
+    return train_step
+
+
+def train_cell(cfg, shape: ShapeSpec, mesh, mode: Optional[str] = None,
+               microbatch: int = 1) -> CellProgram:
+    model = build_model(cfg)
+    mode = mode or shd.ARCH_MODE.get(cfg.name, "tp")
+    opt_cfg = TRAIN_OPT[mode]
+    pshapes = sp.param_shapes(model, cfg)
+    oshapes = jax.eval_shape(lambda p: adam_init(p, opt_cfg), pshapes)
+    state_shapes = {"params": pshapes, "opt": oshapes,
+                    "step": sp.sds((), jnp.int32)}
+    bshapes = sp.batch_shapes(cfg, shape)
+
+    pspec = shd.param_spec_tree(pshapes, cfg, mesh, mode)
+    # moments mirror params: same shapes => same specs
+    mom_spec = jax.tree.map(lambda s: {"m": s, "v": s}, pspec,
+                            is_leaf=lambda l: isinstance(l, P))
+    state_spec = {"params": pspec, "opt": {"mu": mom_spec, "count": P()},
+                  "step": P()}
+    bspec = shd.batch_spec_tree(bshapes, cfg, mesh)
+
+    fn = make_train_step(model, cfg, opt_cfg, microbatch=microbatch)
+    return CellProgram(
+        name=f"{cfg.name}:{shape.name}" + (
+            f":mb{microbatch}" if microbatch > 1 else ""),
+        fn=fn,
+        args=(state_shapes, bshapes),
+        in_shardings=(_named(mesh, state_spec), _named(mesh, bspec)),
+        out_shardings=(_named(mesh, state_spec), None),
+        donate_argnums=(0,),
+    )
+
+
+# ------------------------------------------------------------------ serve
+def make_prefill_step(model, cfg):
+    def prefill_step(params, tokens, cache, extra=None):
+        ctx = QuantCtx(mode="deploy", backend="xla")
+        if cfg.family == "encdec":
+            h, cache = model.prefill(params, tokens, extra, cache, ctx)
+        elif cfg.family == "vlm":
+            h, cache = model.prefill(params, tokens, cache, ctx,
+                                     extra_embeds=extra)
+        else:
+            h, cache = model.prefill(params, tokens, cache, ctx)
+        logits = h @ _head(model, params, cfg)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def _head(model, params, cfg):
+    if hasattr(model, "lm_head"):
+        w = model.lm_head(params)
+    else:
+        w = params["lm_head"]
+    return w.astype(jnp.dtype(cfg.dtype)) * cfg.logit_mult
+
+
+def make_serve_step(model, cfg):
+    """One decode step: insert token, attend against cache, next token."""
+
+    def serve_step(params, token, cache, pos):
+        ctx = QuantCtx(mode="deploy", backend="xla")
+        logits, cache = model.decode_step(params, token, cache, pos, ctx)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+def serve_cell(cfg, shape: ShapeSpec, mesh, weights: str = "int8",
+               mode: Optional[str] = None, kv: str = "bf16") -> CellProgram:
+    model = build_model(cfg)
+    mode = mode or shd.serve_mode(cfg.name)
+    pshapes = sp.param_shapes(model, cfg)
+    if weights in ("int8", "int4"):
+        pshapes = sp.quantize_param_shapes(pshapes, cfg,
+                                           bits=8 if weights == "int8" else 4)
+    cshapes = sp.cache_shapes(model, cfg, shape, kv=kv)
+    pspec = shd.param_spec_tree(pshapes, cfg, mesh, mode)
+    cspec = shd.cache_spec_tree(cshapes, cfg, mesh)
+    B = shape.global_batch
+    dp = shd.dp_axes(mesh)
+    b_ax = dp if B % shd.axis_size(mesh, dp) == 0 else (
+        ("data",) if B % mesh.shape["data"] == 0 else None)
+
+    if shape.kind == "decode":
+        token = sp.sds((B, 1), jnp.int32)
+        pos = sp.sds((), jnp.int32)
+        fn = make_serve_step(model, cfg)
+        return CellProgram(
+            name=f"{cfg.name}:{shape.name}:{weights}",
+            fn=fn,
+            args=(pshapes, token, cshapes, pos),
+            in_shardings=(_named(mesh, pspec),
+                          NamedSharding(mesh, P(b_ax, None)),
+                          _named(mesh, cspec), NamedSharding(mesh, P())),
+            out_shardings=(NamedSharding(mesh, P(b_ax, None)),
+                           _named(mesh, cspec)),
+            donate_argnums=(2,),
+        )
+
+    # prefill
+    bshapes = sp.batch_shapes(cfg, shape)
+    tokens = bshapes["tokens"]
+    tok_spec = NamedSharding(mesh, P(b_ax, None))
+    extra = None
+    extra_spec = None
+    if cfg.family == "encdec":
+        extra = bshapes["frames"]
+        extra_spec = NamedSharding(mesh, P(b_ax, None, None))
+    elif cfg.family == "vlm":
+        extra = bshapes["patch_embeds"]
+        extra_spec = NamedSharding(mesh, P(b_ax, None, None))
+    fn = make_prefill_step(model, cfg)
+    args = (pshapes, tokens, cshapes) + ((extra,) if extra is not None else ())
+    in_sh = (_named(mesh, pspec), tok_spec, _named(mesh, cspec)) + (
+        (extra_spec,) if extra_spec is not None else ())
+    return CellProgram(
+        name=f"{cfg.name}:{shape.name}:{weights}",
+        fn=fn,
+        args=args,
+        in_shardings=in_sh,
+        out_shardings=(tok_spec, _named(mesh, cspec)),
+        donate_argnums=(2,),
+    )
+
+
+def build_cell(cfg, shape: ShapeSpec, mesh, weights: str = "int8",
+               mode: Optional[str] = None, microbatch: int = 1,
+               kv: str = "bf16") -> CellProgram:
+    if shape.kind == "train":
+        return train_cell(cfg, shape, mesh, mode, microbatch=microbatch)
+    return serve_cell(cfg, shape, mesh, weights, mode, kv=kv)

@@ -1,0 +1,164 @@
+"""Attention primitives: chunked online-softmax (train/prefill), decode.
+
+All variants support GQA (n_kv_heads <= n_heads), causal or bidirectional
+masking, and local (sliding-window) attention. The chunked path is the
+memory-efficient Rabe–Staats/flash pattern expressed in pure XLA ops — it
+scans over KV chunks with a running (max, sum, acc) so the (Sq, Sk) score
+matrix is never materialized beyond one chunk. This is what the multi-pod
+dry-run lowers; the Pallas kernels are the TPU-executable analogue.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q (B,Sq,Hq,D), k (B,Sk,Hkv,D) -> scores (B,Hkv,G,Sq,Sk)."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    return jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                      k.astype(jnp.float32))
+
+
+def _gqa_out(probs, v):
+    """probs (B,Hkv,G,Sq,Sk), v (B,Sk,Hkv,D) -> (B,Sq,Hq,D)."""
+    B, Hkv, G, Sq, Sk = probs.shape
+    D = v.shape[-1]
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hkv * G, D)
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    """(Sq, Sk) boolean validity mask from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+              window: int = 0, q_offset: int = 0, chunk: int = 1024,
+              kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Chunked online-softmax attention.
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D). ``q_offset`` is the absolute
+    position of q[0] (prefill continuation). ``kv_len`` optionally masks the
+    valid prefix of k/v (decode against a partially-filled cache).
+    Returns (B, Sq, Hq, D) in q.dtype.
+
+    Causal self-attention skips fully-masked KV blocks by chunking queries
+    and truncating each query chunk's KV to its causal prefix — ~2x fewer
+    attention FLOPs at long sequence (§Perf iteration "causal-qchunk").
+    """
+    Sq, Sk = q.shape[1], k.shape[1]
+    if (causal and window == 0 and q_offset == 0 and Sq == Sk
+            and kv_len is None and chunk < Sq and Sq % chunk == 0):
+        # at most 4 query chunks: captures most of the causal-skip win
+        # ((n+1)/2n flops) without unrolling long chains of inner scans.
+        # At very long Sq the k[:, :hi] slices cost transient KV copies, so
+        # fall back to 2 chunks (still 75% -> 25% saved).
+        n_q = 4 if Sq <= 8192 else 2
+        qchunk = max(chunk, Sq // n_q)
+        outs = []
+        for i in range(Sq // qchunk):
+            hi = (i + 1) * qchunk
+            outs.append(_attention_inner(
+                q[:, i * qchunk:hi], k[:, :hi], v[:, :hi], causal=True,
+                window=0, q_offset=i * qchunk, chunk=chunk, kv_len=None))
+        return jnp.concatenate(outs, axis=1)
+    return _attention_inner(q, k, v, causal=causal, window=window,
+                            q_offset=q_offset, chunk=chunk, kv_len=kv_len)
+
+
+def _attention_inner(q, k, v, *, causal, window, q_offset, chunk, kv_len):
+    B, Sq, Hq, D = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    Dv = v.shape[-1]  # may differ from D (MLA: qk_dim != v_dim)
+    G = Hq // Hkv
+    scale = D**-0.5
+    chunk = min(chunk, Sk)
+    if Sk % chunk:  # pad KV to a chunk multiple; padded keys masked by kv_len
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_len = jnp.minimum(kv_len, Sk) if kv_len is not None else Sk
+        Sk = Sk + pad
+    n_chunks = Sk // chunk
+
+    q_pos = q_offset + jnp.arange(Sq)
+    kc = k.reshape(B, n_chunks, chunk, Hkv, D).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, Dv).swapaxes(0, 1)
+
+    def body(carry, inp):
+        m_run, l_run, acc = carry
+        kb, vb, idx = inp
+        k_pos = idx * chunk + jnp.arange(chunk)
+        s = _gqa_scores(q, kb) * scale  # (B,Hkv,G,Sq,chunk)
+        valid = _mask(q_pos, k_pos, causal, window)
+        if kv_len is not None:
+            valid = valid & (k_pos[None, :] < kv_len)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,Hkv,G,Sq,Dv)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, Dv)
+    return out.astype(q.dtype)
+
+
+def attention_full(q, k, v, *, causal=True, window=0, q_offset=0,
+                   kv_len=None) -> jax.Array:
+    """Reference O(Sq*Sk)-memory attention (oracle for tests/small shapes)."""
+    B, Sq, Hq, D = q.shape
+    Sk = k.shape[1]
+    scale = D**-0.5
+    s = _gqa_scores(q, k) * scale
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    valid = _mask(q_pos, k_pos, causal, window)
+    if kv_len is not None:
+        valid = valid & (k_pos[None, :] < kv_len)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: int = 0) -> jax.Array:
+    """Single-token decode: q (B,1,Hq,D) vs cache (B,Smax,Hkv,D).
+
+    ``pos`` is the index of the current token (cache holds pos+1 valid
+    entries including the freshly-inserted one).
+    """
+    B, _, Hq, D = q.shape
+    Smax = k_cache.shape[1]
+    scale = D**-0.5
+    s = _gqa_scores(q, k_cache) * scale  # (B,Hkv,G,1,Smax)
+    k_pos = jnp.arange(Smax)
+    valid = k_pos <= pos
+    if window > 0:
+        valid &= k_pos > pos - window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v_cache).astype(q.dtype)

@@ -1,0 +1,284 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/audio frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, S_enc, D) directly to the encoder.
+LayerNorm + GELU + biased projections, sinusoidal positions (whisper flavor);
+decoder has causal self-attention + cross-attention over encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.context import QuantCtx
+from repro.core.reconstruct import BlockHandle, Site
+from repro.models import attention as attn
+from repro.models import common
+
+
+def _sinusoid(S: int, D: int) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(D // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / D))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _attn_params(key, cfg, dtype, cross=False) -> dict:
+    D, H, Dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = D**-0.5
+    return {
+        "wq": jax.random.normal(ks[0], (D, H * Dh), dtype) * s,
+        "bq": jnp.zeros((H * Dh,), dtype),
+        "wk": jax.random.normal(ks[1], (D, H * Dh), dtype) * s,
+        "wv": jax.random.normal(ks[2], (D, H * Dh), dtype) * s,
+        "bv": jnp.zeros((H * Dh,), dtype),
+        "wo": jax.random.normal(ks[3], (H * Dh, D), dtype) * (H * Dh) ** -0.5,
+        "bo": jnp.zeros((D,), dtype),
+    }
+
+
+def _enc_layer_params(key, cfg, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = common.mlp_params(k2, cfg.d_model, cfg.d_ff, "gelu", dtype)
+    p["b_up"] = jnp.zeros((cfg.d_ff,), dtype)
+    p["b_down"] = jnp.zeros((cfg.d_model,), dtype)
+    return {
+        "ln1": common.norm_params("layernorm", cfg.d_model, dtype),
+        "attn": _attn_params(k1, cfg, dtype),
+        "ln2": common.norm_params("layernorm", cfg.d_model, dtype),
+        "mlp": p,
+    }
+
+
+def _dec_layer_params(key, cfg, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    base = _enc_layer_params(jax.random.fold_in(key, 1), cfg, dtype)
+    return {
+        "ln1": base["ln1"],
+        "attn": _attn_params(k1, cfg, dtype),
+        "ln_x": common.norm_params("layernorm", cfg.d_model, dtype),
+        "xattn": _attn_params(k2, cfg, dtype, cross=True),
+        "ln2": base["ln2"],
+        "mlp": base["mlp"],
+    }
+
+
+def _mha(p, xq, xkv, ctx, name, causal, cfg, kv_override=None):
+    B, Sq, _ = xq.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    q = ctx.linear(f"{name}.wq", xq, p["wq"], p["bq"]).reshape(B, Sq, H, Dh)
+    if kv_override is None:
+        Sk = xkv.shape[1]
+        k = ctx.linear(f"{name}.wk", xkv, p["wk"]).reshape(B, Sk, H, Dh)
+        v = ctx.linear(f"{name}.wv", xkv, p["wv"], p["bv"]).reshape(B, Sk, H, Dh)
+    else:
+        k, v = kv_override
+    o = attn.attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    out = ctx.linear(f"{name}.wo", o.reshape(B, Sq, H * Dh), p["wo"], p["bo"])
+    return out, (k, v)
+
+
+class EncDecLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(key, 6)
+
+        def stack(kf, builder, n):
+            kk = jax.random.split(kf, n)
+            return jax.vmap(lambda k: builder(k, cfg, dtype))(kk)
+
+        return {
+            "embed": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                       dtype) * 0.02,
+            "enc_layers": stack(ks[1], _enc_layer_params, cfg.enc_layers),
+            "enc_norm": common.norm_params("layernorm", cfg.d_model, dtype),
+            "dec_layers": stack(ks[2], _dec_layer_params, cfg.n_layers),
+            "dec_norm": common.norm_params("layernorm", cfg.d_model, dtype),
+            "lm_head": jax.random.normal(ks[3], (cfg.d_model, cfg.vocab),
+                                         dtype) * cfg.d_model**-0.5,
+        }
+
+    # ------------------------------------------------------------ encoder
+    def encode(self, params, frames, ctx):
+        """frames: precomputed (B, S_enc, D) embeddings (frontend stub)."""
+        cfg = self.cfg
+        B, S, D = frames.shape
+        x = frames + _sinusoid(S, D).astype(frames.dtype)[None]
+
+        def body(h, p_l):
+            z = common.apply_norm("layernorm", h, p_l["ln1"])
+            a, _ = _mha(p_l["attn"], z, z, ctx, "enc.attn", False, cfg)
+            h = h + a
+            z = common.apply_norm("layernorm", h, p_l["ln2"])
+            h = h + common.mlp(p_l["mlp"], z, ctx, "enc.mlp", "gelu")
+            return h, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return common.apply_norm("layernorm", x, params["enc_norm"])
+
+    # ------------------------------------------------------------ decoder
+    def _dec_layer(self, p_l, h, enc_out, ctx, name, collect=False,
+                   self_kv=None, cross_kv=None, pos=None):
+        cfg = self.cfg
+        z = common.apply_norm("layernorm", h, p_l["ln1"])
+        if self_kv is None:
+            a, skv = _mha(p_l["attn"], z, z, ctx, f"{name}.attn", True, cfg)
+        else:  # decode: self_kv = (k_cache, v_cache) with token inserted
+            B = z.shape[0]
+            H, Dh = cfg.n_heads, cfg.head_dim
+            q = ctx.linear(f"{name}.attn.wq", z, p_l["attn"]["wq"],
+                           p_l["attn"]["bq"]).reshape(B, 1, H, Dh)
+            a = attn.decode_attention(q, self_kv[0], self_kv[1], pos)
+            a = ctx.linear(f"{name}.attn.wo", a.reshape(B, 1, H * Dh),
+                           p_l["attn"]["wo"], p_l["attn"]["bo"])
+            skv = None
+        h = h + a
+        z = common.apply_norm("layernorm", h, p_l["ln_x"])
+        xa, xkv = _mha(p_l["xattn"], z, enc_out, ctx, f"{name}.xattn", False,
+                       cfg, kv_override=cross_kv)
+        h = h + xa
+        z = common.apply_norm("layernorm", h, p_l["ln2"])
+        h = h + common.mlp(p_l["mlp"], z, ctx, f"{name}.mlp", "gelu")
+        if collect:
+            return h, (skv, xkv)
+        return h
+
+    def decode_full(self, params, tokens, enc_out, ctx, collect=False):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = common.embed_tokens(params["embed"], tokens)
+        x = x + _sinusoid(S, cfg.d_model).astype(x.dtype)[None]
+
+        def body(h, p_l):
+            out = self._dec_layer(p_l, h, enc_out, ctx, "dec", collect=collect)
+            if collect:
+                return out[0], out[1]
+            return out, None
+
+        if cfg.remat and not collect:
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        x, kvs = jax.lax.scan(body, x, params["dec_layers"])
+        return common.apply_norm("layernorm", x, params["dec_norm"]), kvs
+
+    def loss(self, params, batch, ctx):
+        enc_out = self.encode(params, batch["frames"], ctx)
+        x, _ = self.decode_full(params, batch["tokens"], enc_out, ctx)
+        ce = common.fused_cross_entropy(x, params["lm_head"], batch["labels"],
+                                        batch.get("mask"), self.cfg.xent_chunk)
+        return ce, {"ce": ce}
+
+    # -------------------------------------------------------------- serve
+    def init_cache(self, batch: int, max_len: int, enc_len: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        L, H, Dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+        return {
+            "k": jnp.zeros((L, batch, max_len, H, Dh), dtype),
+            "v": jnp.zeros((L, batch, max_len, H, Dh), dtype),
+            "xk": jnp.zeros((L, batch, enc_len, H, Dh), dtype),
+            "xv": jnp.zeros((L, batch, enc_len, H, Dh), dtype),
+        }
+
+    def prefill(self, params, tokens, frames, cache, ctx):
+        enc_out = self.encode(params, frames, ctx)
+        x, kvs = self.decode_full(params, tokens, enc_out, ctx, collect=True)
+        (sk, sv), (xk, xv) = kvs[0], kvs[1]
+        S = tokens.shape[1]
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], sk.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], sv.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+        cache["xk"] = xk.astype(cache["xk"].dtype)
+        cache["xv"] = xv.astype(cache["xv"].dtype)
+        return x[:, -1:], cache
+
+    def decode_step(self, params, token, cache, pos, ctx):
+        cfg = self.cfg
+        B = token.shape[0]
+        x = common.embed_tokens(params["embed"], token)
+        # sinusoidal position for the current token
+        sin_tab = _sinusoid(1, cfg.d_model)  # recomputed cheaply via angle*pos
+        pos_emb = _sinusoid_at(pos, cfg.d_model)
+        x = x + pos_emb.astype(x.dtype)[None, None, :]
+
+        def body(carry, inp):
+            h, cache = carry
+            p_l, i = inp
+            H, Dh = cfg.n_heads, cfg.head_dim
+            z = common.apply_norm("layernorm", h, p_l["ln1"])
+            k = ctx.linear("dec.attn.wk", z, p_l["attn"]["wk"]).reshape(
+                B, 1, H, Dh)
+            v = ctx.linear("dec.attn.wv", z, p_l["attn"]["wv"],
+                           p_l["attn"]["bv"]).reshape(B, 1, H, Dh)
+            cache["k"] = jax.lax.dynamic_update_slice(
+                cache["k"], k[None].astype(cache["k"].dtype), (i, 0, pos, 0, 0))
+            cache["v"] = jax.lax.dynamic_update_slice(
+                cache["v"], v[None].astype(cache["v"].dtype), (i, 0, pos, 0, 0))
+            self_kv = (
+                jax.lax.dynamic_index_in_dim(cache["k"], i, 0, False),
+                jax.lax.dynamic_index_in_dim(cache["v"], i, 0, False))
+            cross_kv = (
+                jax.lax.dynamic_index_in_dim(cache["xk"], i, 0, False),
+                jax.lax.dynamic_index_in_dim(cache["xv"], i, 0, False))
+            h = self._dec_layer(p_l, h, None, ctx, "dec", self_kv=self_kv,
+                                cross_kv=cross_kv, pos=pos)
+            return (h, cache), None
+
+        n = cfg.n_layers
+        (x, cache), _ = jax.lax.scan(body, (x, cache),
+                                     (params["dec_layers"], jnp.arange(n)))
+        x = common.apply_norm("layernorm", x, params["dec_norm"])
+        logits = x @ params["lm_head"].astype(x.dtype)
+        return logits, cache
+
+    # ---------------------------------------------------------- PTQ plan
+    def quant_blocks(self, params, batch_tokens, frames):
+        """Quantizes decoder layers (the generation path); encoder layers are
+        quantized with the same machinery by treating enc as preprocessing."""
+        cfg = self.cfg
+        ctx = QuantCtx(mode="fp")
+        enc_out = self.encode(params, frames, ctx)
+        x0 = common.embed_tokens(params["embed"], batch_tokens)
+        x0 = x0 + _sinusoid(batch_tokens.shape[1],
+                            cfg.d_model).astype(x0.dtype)[None]
+        a_names = ["wq", "wk", "wv", "wo"]
+        blocks = []
+        for i in range(cfg.n_layers):
+            p_l = jax.tree.map(lambda a: a[i], params["dec_layers"])
+            name = f"dec{i}"
+            sites = {}
+            for n in a_names:
+                sites[f"{name}.attn.{n}"] = Site(("attn", n))
+                sites[f"{name}.xattn.{n}"] = Site(("xattn", n))
+            for n in ("w_up", "w_down"):
+                sites[f"{name}.mlp.{n}"] = Site(("mlp", n))
+
+            def apply_fn(p, x, ctx, _n=name):
+                return self._dec_layer(p, x, enc_out, ctx, _n)
+
+            blocks.append(BlockHandle(name, p_l, apply_fn, sites))
+
+        def assemble(finalized):
+            out = dict(params)
+            out["dec_layers"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                             *finalized)
+            return out
+
+        return x0, blocks, assemble
+
+
+def _sinusoid_at(pos, D: int) -> jax.Array:
+    dim = jnp.arange(D // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / (10000.0 ** (2 * dim / D))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,107 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Train/prefill expand the compressed latent into full per-head K/V; decode uses
+the weight-absorbed form so the KV cache is only (kv_lora_rank + qk_rope_dim)
+per token — the memory-term win that makes deepseek long-context decode cheap.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.context import QuantCtx
+from repro.models import attention as attn
+from repro.models import common
+
+
+def mla_params(key, cfg, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    D, H = cfg.d_model, cfg.n_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    s = D**-0.5
+    return {
+        "wq_a": jax.random.normal(ks[0], (D, rq), dtype) * s,
+        "q_norm": common.norm_params("rmsnorm", rq, dtype),
+        "wq_b": jax.random.normal(ks[1], (rq, H * (dn + dr)), dtype) * rq**-0.5,
+        "wkv_a": jax.random.normal(ks[2], (D, rkv + dr), dtype) * s,
+        "kv_norm": common.norm_params("rmsnorm", rkv, dtype),
+        "wkv_b": jax.random.normal(ks[3], (rkv, H * (dn + dv)), dtype) * rkv**-0.5,
+        "wo": jax.random.normal(ks[4], (H * dv, D), dtype) * (H * dv) ** -0.5,
+    }
+
+
+def _q_proj(p, x, cfg, ctx, name, sin, cos):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = ctx.linear(f"{name}.wq_a", x, p["wq_a"])
+    cq = common.rmsnorm(cq, p["q_norm"]["scale"])
+    q = ctx.linear(f"{name}.wq_b", cq, p["wq_b"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = common.apply_rope(q_rope, sin, cos)
+    return q_nope, q_rope
+
+
+def _kv_latent(p, x, cfg, ctx, name, sin, cos):
+    rkv, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    ckv_full = ctx.linear(f"{name}.wkv_a", x, p["wkv_a"])
+    ckv, k_rope = ckv_full[..., :rkv], ckv_full[..., rkv:]
+    ckv = common.rmsnorm(ckv, p["kv_norm"]["scale"])
+    k_rope = common.apply_rope(k_rope[:, :, None, :], sin, cos)[:, :, 0]
+    return ckv, k_rope
+
+
+def mla_forward(p, x, cfg, ctx: QuantCtx, name, sin, cos):
+    """Full-sequence MLA (train / teacher). Returns (out, (ckv, k_rope))."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _q_proj(p, x, cfg, ctx, name, sin, cos)
+    ckv, k_rope = _kv_latent(p, x, cfg, ctx, name, sin, cos)
+
+    kv = ctx.linear(f"{name}.wkv_b", ckv, p["wkv_b"]).reshape(B, S, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, H, dr))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = attn.attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    out = ctx.linear(f"{name}.wo", o.reshape(B, S, H * dv), p["wo"])
+    return out, (ckv, k_rope)
+
+
+def mla_decode(p, x, cfg, ctx: QuantCtx, name, sin, cos, ckv_cache, kr_cache,
+               pos):
+    """Absorbed single-token decode against the latent cache.
+
+    ckv_cache: (B, Smax, rkv) with the current token already inserted;
+    kr_cache:  (B, Smax, dr).
+    """
+    B, _, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rkv = cfg.kv_lora_rank
+    q_nope, q_rope = _q_proj(p, x, cfg, ctx, name, sin, cos)  # (B,1,H,*)
+
+    wkv_b = ctx.get_weight(f"{name}.wkv_b", p["wkv_b"]).reshape(rkv, H, dn + dv)
+    w_kb, w_vb = wkv_b[..., :dn], wkv_b[..., dn:]
+    # absorb k projection into q: (B,1,H,dn)x(r,H,dn)->(B,1,H,r)
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       w_kb.astype(jnp.float32))
+    scale = (dn + dr) ** -0.5
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_abs, ckv_cache.astype(jnp.float32))
+         + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                      kr_cache.astype(jnp.float32))) * scale
+    valid = jnp.arange(ckv_cache.shape[1]) <= pos
+    s = jnp.where(valid[None, None, None, :], s, attn.NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", pr, ckv_cache.astype(jnp.float32))
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_vb.astype(jnp.float32))
+    out = ctx.linear(f"{name}.wo", o.reshape(B, 1, H * dv).astype(x.dtype),
+                     p["wo"])
+    return out
+
+
+def mla_sites(prefix: str, cfg) -> dict:
+    from repro.core.reconstruct import Site
+    names = ["wq_a", "wq_b", "wkv_a", "wkv_b", "wo"]
+    return {f"{prefix}.{n}": Site(("attn", n)) for n in names}

@@ -1,0 +1,19 @@
+"""Model registry: family -> implementation class."""
+from __future__ import annotations
+
+from repro.models.encdec import EncDecLM
+from repro.models.rglru import GriffinLM
+from repro.models.ssm import MambaLM
+from repro.models.transformer import TransformerLM
+
+
+def build_model(cfg):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return TransformerLM(cfg)
+    if cfg.family == "ssm":
+        return MambaLM(cfg)
+    if cfg.family == "hybrid":
+        return GriffinLM(cfg)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

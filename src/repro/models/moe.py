@@ -1,0 +1,131 @@
+"""Mixture-of-Experts FFN (GShard/Switch-style einsum dispatch).
+
+Capacity-based top-k routing with group-local position assignment:
+tokens are viewed as (G groups, N tokens) so the dispatch tensor
+(G, N, E, C) stays O(T * N * k * cf) bytes globally — ``moe_group``
+controls N and is chosen per-config so the per-chip share is small.
+
+Sharding: group axis -> data mesh axis, expert axis -> model mesh axis
+(deepseek's 256 experts additionally split over data; see launch/sharding).
+Router weights stay full-precision (tiny + accuracy-critical); expert
+weights are quantizable through ctx.linear with batch_dims=1 (per-expert
+FlexRound scales, paper Eq. 2 applied expert-wise).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.context import QuantCtx
+from repro.models import common
+
+
+def moe_params(key, cfg, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    p = {
+        "router": jax.random.normal(k1, (D, E), jnp.float32) * (D**-0.5),
+        "experts": common.mlp_params(k2, D, F, cfg.act, dtype, lead=(E,)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = common.mlp_params(
+            k3, D, F * cfg.n_shared_experts, cfg.act, dtype)
+    return p
+
+
+def _capacity(n: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = int(n * top_k * factor / n_experts)
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def _pick_group(tokens: int, target: int) -> int:
+    """Largest divisor of ``tokens`` that is <= target (group size)."""
+    for n in range(target, 0, -1):
+        if tokens % n == 0:
+            return n
+    return 1
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg, ctx: QuantCtx, name: str) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    N = _pick_group(T, min(cfg.moe_group, T))
+    G = T // N
+    C = _capacity(N, K, E, cfg.capacity_factor)
+
+    # groups ride the data axes; experts ride the model axis (EP). Without
+    # these hints GSPMD falls back to "involuntary full rematerialization"
+    # (observed: replicating the (G,N,D) stream per layer — see EXPERIMENTS.md
+    # §Perf deepseek iteration 1).
+    xt = common.shard_hint(x.reshape(G, N, D), "dp", None, None)
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (G,N,E)
+    gate_vals, idx = jax.lax.top_k(probs, K)  # (G,N,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)  # renormalize top-k
+
+    counts = jnp.zeros((G, E), jnp.int32)
+    dispatch = jnp.zeros((G, N, E, C), jnp.float32)
+    combine = jnp.zeros((G, N, E, C), jnp.float32)
+    for j in range(K):  # K is small and static (1..8)
+        onehot = jax.nn.one_hot(idx[..., j], E, dtype=jnp.int32)  # (G,N,E)
+        pos = counts[:, None, :] + jnp.cumsum(onehot, axis=1) - onehot
+        within = (pos < C) & (onehot > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(within, pos, C), C, dtype=jnp.float32)
+        d_j = jnp.where(within[..., None], pos_oh, 0.0)  # (G,N,E,C)
+        dispatch = dispatch + d_j
+        combine = combine + d_j * gate_vals[..., j][..., None, None]
+        counts = counts + jnp.sum(onehot, axis=1)
+
+    xd = x.dtype
+    # expert axis placement must match the weight sharding: full EP (one
+    # expert per chip over data*model) when divisible, else EP over model
+    e_axes = "model"
+    mesh = common.get_ambient_mesh()
+    if mesh is not None:
+        names = set(mesh.axis_names)
+        full = (mesh.shape.get("data", 1) * mesh.shape.get("model", 1)
+                if "data" in names or "model" in names else 1)
+        if full > 1 and E % full == 0:
+            e_axes = ("data", "model")
+    # Under full EP the expert buffers give up the group sharding and take
+    # E over (data, model) — the dispatch einsum becomes the all-to-all.
+    # (Measured iteration log in EXPERIMENTS.md §Perf: keeping the masks
+    # E-sharded too is what minimizes peak; a chunked-dispatch variant is the
+    # recorded next step for the remaining prefill transient.)
+    g_e = None if isinstance(e_axes, tuple) else "dp"
+    dispatch = common.shard_hint(dispatch, g_e, None, e_axes, None)
+    combine = common.shard_hint(combine, g_e, None, e_axes, None)
+    xe = jnp.einsum("gnec,gnd->gecd", dispatch.astype(xd), xt)  # (G,E,C,D)
+    xe = common.shard_hint(xe, g_e, e_axes, None, None)
+    ye = common.mlp(p["experts"], xe, ctx, f"{name}.experts", cfg.act,
+                    batch_dims=1)
+    ye = common.shard_hint(ye, g_e, e_axes, None, None)
+    y = jnp.einsum("gnec,gecd->gnd", combine.astype(xd), ye)
+    y = common.shard_hint(y, "dp", None, None).reshape(B, S, D)
+
+    if "shared" in p:
+        y = y + common.mlp(p["shared"], x, ctx, f"{name}.shared", cfg.act)
+
+    # auxiliary load-balance loss (Switch eq. 4), returned via ctx-free pair
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    fe = jnp.mean(dispatch.sum(-1), axis=(0, 1))  # fraction dispatched
+    aux = E * jnp.sum(me * fe)
+    return y, aux
+
+
+def moe_sites(prefix: str, cfg) -> dict:
+    """Quantizable leaves for one MoE layer (used by quant_plan)."""
+    from repro.core.reconstruct import Site
+    base = ("mlp", "experts")
+    names = ["w_up", "w_down"] + (["w_gate"] if cfg.act == "swiglu" else [])
+    sites = {f"{prefix}.experts.{n}": Site(base + (n,), batch_dims=1)
+             for n in names}
+    if cfg.n_shared_experts:
+        sites.update({f"{prefix}.shared.{n}": Site(("mlp", "shared", n))
+                      for n in names})
+    return sites

@@ -1,0 +1,382 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Layer pattern "RRA" (two recurrent blocks per local-attention block). The
+RG-LRU linear recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t) runs as
+a jax.lax.associative_scan over the sequence (log-depth on TPU) for
+train/prefill, and as an O(1) state update for decode — which is why this
+arch runs the long_500k cell. Local attention decodes against a ring-buffer
+cache of ``local_window`` slots so decode memory is O(window), not O(seq).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.context import QuantCtx
+from repro.core.reconstruct import BlockHandle, Site
+from repro.models import attention as attn
+from repro.models import common
+
+C_RGLRU = 8.0
+
+
+# ----------------------------------------------------------------- RG-LRU
+def rglru_params(key, cfg, dtype) -> dict:
+    R = cfg.lru_width
+    ks = jax.random.split(key, 4)
+    s = R**-0.5
+    # Lambda init so that a = exp(-c*softplus(L)*r) sits in (0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(
+        jnp.linspace(0.9, 0.999, R).astype(jnp.float32)) / C_RGLRU))
+    return {
+        "w_a": jax.random.normal(ks[0], (R, R), dtype) * s,
+        "b_a": jnp.zeros((R,), jnp.float32),
+        "w_i": jax.random.normal(ks[1], (R, R), dtype) * s,
+        "b_i": jnp.zeros((R,), jnp.float32),
+        "lam": lam,
+    }
+
+
+def _rglru_gates(p, x, ctx, name):
+    r = jax.nn.sigmoid(
+        ctx.linear(f"{name}.w_a", x, p["w_a"]).astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(
+        ctx.linear(f"{name}.w_i", x, p["w_i"]).astype(jnp.float32) + p["b_i"])
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"]) * r  # (B,S,R), negative
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (
+        i * x.astype(jnp.float32))
+    return a, b
+
+
+def rglru_scan(p, x, ctx, name, h0=None):
+    """x (B,S,R) -> (y (B,S,R), h_final (B,R)) via associative scan."""
+    a, b = _rglru_gates(p, x, ctx, name)
+    if h0 is not None:  # fold initial state into the first step
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_step(p, x, ctx, name, h_prev):
+    """x (B,1,R), h_prev (B,R) -> (y (B,1,R), h (B,R))."""
+    a, b = _rglru_gates(p, x, ctx, name)
+    h = a[:, 0] * h_prev.astype(jnp.float32) + b[:, 0]
+    return h[:, None, :].astype(x.dtype), h
+
+
+# ------------------------------------------------------------ block params
+def recurrent_block_params(key, cfg, dtype) -> dict:
+    D, R = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 5)
+    return {
+        "ln": common.norm_params("rmsnorm", D, dtype),
+        "w_x": jax.random.normal(ks[0], (D, R), dtype) * D**-0.5,
+        "w_gate": jax.random.normal(ks[1], (D, R), dtype) * D**-0.5,
+        "conv_w": jax.random.normal(ks[2], (4, R), dtype) * 0.2,
+        "conv_b": jnp.zeros((R,), dtype),
+        "rglru": rglru_params(ks[3], cfg, dtype),
+        "w_o": jax.random.normal(ks[4], (R, D), dtype) * R**-0.5,
+    }
+
+
+def attn_block_params(key, cfg, dtype) -> dict:
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = D**-0.5
+    return {
+        "ln": common.norm_params("rmsnorm", D, dtype),
+        "wq": jax.random.normal(ks[0], (D, H * Dh), dtype) * s,
+        "wk": jax.random.normal(ks[1], (D, Hkv * Dh), dtype) * s,
+        "wv": jax.random.normal(ks[2], (D, Hkv * Dh), dtype) * s,
+        "wo": jax.random.normal(ks[3], (H * Dh, D), dtype) * (H * Dh) ** -0.5,
+    }
+
+
+def mlp_block_params(key, cfg, dtype) -> dict:
+    return {
+        "ln": common.norm_params("rmsnorm", cfg.d_model, dtype),
+        "mlp": common.mlp_params(key, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def _causal_conv(x, w, bias, init=None):
+    K = w.shape[0]
+    if init is None:
+        ext = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        ext = jnp.concatenate([init.astype(x.dtype), x], axis=1)
+    out = sum(ext[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + bias
+
+
+# ----------------------------------------------------------- block applies
+def recurrent_block(p, x, cfg, ctx, name, h0=None, conv_init=None,
+                    return_state=False):
+    res = x
+    h = common.apply_norm("rmsnorm", x, p["ln"])
+    xr = ctx.linear(f"{name}.w_x", h, p["w_x"])
+    conv_tail = xr[:, -3:, :]
+    xr = _causal_conv(xr, p["conv_w"], p["conv_b"], conv_init)
+    y, h_last = rglru_scan(p["rglru"], xr, ctx, f"{name}.rglru", h0)
+    gate = jax.nn.gelu(
+        ctx.linear(f"{name}.w_gate", h, p["w_gate"]).astype(jnp.float32))
+    out = ctx.linear(f"{name}.w_o", (y.astype(jnp.float32) * gate).astype(x.dtype),
+                     p["w_o"])
+    if return_state:
+        return res + out, (h_last, conv_tail)
+    return res + out
+
+
+def recurrent_block_step(p, x, cfg, ctx, name, h_prev, conv_state):
+    """Decode step. conv_state (B,3,R) raw pre-conv inputs."""
+    res = x
+    h = common.apply_norm("rmsnorm", x, p["ln"])
+    xr = ctx.linear(f"{name}.w_x", h, p["w_x"])
+    window = jnp.concatenate([conv_state.astype(xr.dtype), xr], axis=1)
+    conv_new = window[:, 1:, :]
+    xc = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    y, h_new = rglru_step(p["rglru"], xc[:, None, :].astype(x.dtype), ctx,
+                          f"{name}.rglru", h_prev)
+    gate = jax.nn.gelu(
+        ctx.linear(f"{name}.w_gate", h, p["w_gate"]).astype(jnp.float32))
+    out = ctx.linear(f"{name}.w_o", (y.astype(jnp.float32) * gate).astype(x.dtype),
+                     p["w_o"])
+    return res + out, h_new, conv_new
+
+
+def local_attn_block(p, x, cfg, ctx, name, sin, cos, return_kv=False):
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    res = x
+    h = common.apply_norm("rmsnorm", x, p["ln"])
+    q = ctx.linear(f"{name}.wq", h, p["wq"]).reshape(B, S, H, Dh)
+    k = ctx.linear(f"{name}.wk", h, p["wk"]).reshape(B, S, Hkv, Dh)
+    v = ctx.linear(f"{name}.wv", h, p["wv"]).reshape(B, S, Hkv, Dh)
+    q = common.apply_rope(q, sin, cos)
+    k = common.apply_rope(k, sin, cos)
+    o = attn.attention(q, k, v, causal=True, window=cfg.local_window,
+                       chunk=cfg.attn_chunk)
+    out = ctx.linear(f"{name}.wo", o.reshape(B, S, H * Dh), p["wo"])
+    if return_kv:
+        return res + out, (k, v)
+    return res + out
+
+
+def local_attn_block_step(p, x, cfg, ctx, name, sin, cos, k_ring, v_ring,
+                          kpos_ring, pos):
+    """Ring-buffer decode. k_ring/v_ring (B,W,Hkv,Dh); kpos_ring (W,)."""
+    B = x.shape[0]
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    W = k_ring.shape[1]
+    res = x
+    h = common.apply_norm("rmsnorm", x, p["ln"])
+    q = ctx.linear(f"{name}.wq", h, p["wq"]).reshape(B, 1, H, Dh)
+    k = ctx.linear(f"{name}.wk", h, p["wk"]).reshape(B, 1, Hkv, Dh)
+    v = ctx.linear(f"{name}.wv", h, p["wv"]).reshape(B, 1, Hkv, Dh)
+    q = common.apply_rope(q, sin, cos)
+    k = common.apply_rope(k, sin, cos)
+    slot = jnp.mod(pos, W)
+    k_ring = jax.lax.dynamic_update_slice(k_ring, k.astype(k_ring.dtype),
+                                          (0, slot, 0, 0))
+    v_ring = jax.lax.dynamic_update_slice(v_ring, v.astype(v_ring.dtype),
+                                          (0, slot, 0, 0))
+    kpos_ring = jax.lax.dynamic_update_slice(kpos_ring, pos[None], (slot,))
+    s = attn._gqa_scores(q, k_ring) * Dh**-0.5  # (B,Hkv,G,1,W)
+    valid = (kpos_ring >= 0) & (kpos_ring <= pos) & (kpos_ring > pos - W)
+    s = jnp.where(valid[None, None, None, None, :], s, attn.NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = attn._gqa_out(pr, v_ring).astype(x.dtype)
+    out = ctx.linear(f"{name}.wo", o.reshape(B, 1, H * Dh), p["wo"])
+    return res + out, k_ring, v_ring, kpos_ring
+
+
+# ---------------------------------------------------------------- the LM
+class GriffinLM:
+    """Unrolled layer pattern (26 layers at 2560 width keeps HLO small)."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        pat = cfg.layer_pattern or "RRA"
+        self.kinds = [pat[i % len(pat)] for i in range(cfg.n_layers)]
+
+    def init(self, key):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(key, cfg.n_layers + 3)
+        layers = []
+        for i, kind in enumerate(self.kinds):
+            k1, k2 = jax.random.split(ks[i])
+            p = (recurrent_block_params(k1, cfg, dtype) if kind == "R"
+                 else attn_block_params(k1, cfg, dtype))
+            layers.append({"mix": p,
+                           "ffn": mlp_block_params(k2, cfg, dtype)})
+        return {
+            "embed": jax.random.normal(ks[-3], (cfg.vocab, cfg.d_model),
+                                       dtype) * 0.02,
+            "layers": layers,
+            "final_norm": common.norm_params("rmsnorm", cfg.d_model, dtype),
+            "lm_head": jax.random.normal(ks[-2], (cfg.d_model, cfg.vocab),
+                                         dtype) * cfg.d_model**-0.5,
+        }
+
+    def _rope(self, B, S, offset=0):
+        pos = jnp.broadcast_to(offset + jnp.arange(S)[None], (B, S))
+        return common.rope_sin_cos(pos, self.cfg.head_dim, self.cfg.rope_theta)
+
+    def _layer(self, i, p, x, ctx, sin, cos, collect=False):
+        cfg = self.cfg
+        name = f"layer{i}"
+        if self.kinds[i] == "R":
+            if collect:
+                x, st = recurrent_block(p["mix"], x, cfg, ctx, name,
+                                        return_state=True)
+            else:
+                x = recurrent_block(p["mix"], x, cfg, ctx, name)
+                st = None
+        else:
+            if collect:
+                x, st = local_attn_block(p["mix"], x, cfg, ctx, name, sin, cos,
+                                         return_kv=True)
+            else:
+                x = local_attn_block(p["mix"], x, cfg, ctx, name, sin, cos)
+                st = None
+        h = common.apply_norm("rmsnorm", x, p["ffn"]["ln"])
+        x = x + common.mlp(p["ffn"]["mlp"], h, ctx, f"{name}.mlp", cfg.act)
+        return x, st
+
+    def backbone(self, params, tokens, ctx, collect=False):
+        cfg = self.cfg
+        x = common.embed_tokens(params["embed"], tokens, cfg.emb_mult)
+        B, S, _ = x.shape
+        sin, cos = self._rope(B, S)
+        states = []
+        for i, p in enumerate(params["layers"]):
+            x, st = self._layer(i, p, x, ctx, sin, cos, collect)
+            states.append(st)
+        x = common.apply_norm("rmsnorm", x, params["final_norm"])
+        return x, states
+
+    def loss(self, params, batch, ctx):
+        x, _ = self.backbone(params, batch["tokens"], ctx)
+        ce = common.fused_cross_entropy(x, params["lm_head"], batch["labels"],
+                                        batch.get("mask"), self.cfg.xent_chunk)
+        return ce, {"ce": ce}
+
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        W = min(cfg.local_window or max_len, max_len)
+        cache: Dict[str, Any] = {"layers": []}
+        for kind in self.kinds:
+            if kind == "R":
+                cache["layers"].append({
+                    "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+                    "conv": jnp.zeros((batch, 3, cfg.lru_width), jnp.float32),
+                })
+            else:
+                cache["layers"].append({
+                    "k": jnp.zeros((batch, W, cfg.n_kv_heads, cfg.head_dim),
+                                   dtype),
+                    "v": jnp.zeros((batch, W, cfg.n_kv_heads, cfg.head_dim),
+                                   dtype),
+                    "kpos": jnp.full((W,), -1, jnp.int32),
+                })
+        return cache
+
+    def prefill(self, params, tokens, cache, ctx):
+        cfg = self.cfg
+        x, states = self.backbone(params, tokens, ctx, collect=True)
+        S = tokens.shape[1]
+        W = cache["layers"][self._first_attn()]["k"].shape[1] \
+            if "A" in self.kinds else 0
+        new_layers = []
+        for i, (st, c) in enumerate(zip(states, cache["layers"])):
+            if self.kinds[i] == "R":
+                h_last, conv_tail = st
+                ct = conv_tail
+                if ct.shape[1] < 3:  # short prefill: left-pad
+                    ct = jnp.pad(ct, ((0, 0), (3 - ct.shape[1], 0), (0, 0)))
+                new_layers.append({"h": h_last.astype(jnp.float32),
+                                   "conv": ct.astype(jnp.float32)})
+            else:
+                k, v = st
+                n = min(W, S)
+                ks, vs = k[:, -n:], v[:, -n:]
+                positions = jnp.arange(S - n, S)
+                slots = jnp.mod(positions, W)
+                kc = c["k"].at[:, slots].set(ks.astype(c["k"].dtype))
+                vc = c["v"].at[:, slots].set(vs.astype(c["v"].dtype))
+                kp = c["kpos"].at[slots].set(positions)
+                new_layers.append({"k": kc, "v": vc, "kpos": kp})
+        return x[:, -1:], {"layers": new_layers}
+
+    def _first_attn(self):
+        return self.kinds.index("A") if "A" in self.kinds else 0
+
+    def decode_step(self, params, token, cache, pos, ctx):
+        cfg = self.cfg
+        x = common.embed_tokens(params["embed"], token, cfg.emb_mult)
+        B = x.shape[0]
+        pos_arr = jnp.full((B, 1), pos)
+        sin, cos = common.rope_sin_cos(pos_arr, cfg.head_dim, cfg.rope_theta)
+        new_layers = []
+        for i, (p, c) in enumerate(zip(params["layers"], cache["layers"])):
+            name = f"layer{i}"
+            if self.kinds[i] == "R":
+                x, h_new, conv_new = recurrent_block_step(
+                    p["mix"], x, cfg, ctx, name, c["h"], c["conv"])
+                new_layers.append({"h": h_new, "conv": conv_new})
+            else:
+                x, kc, vc, kp = local_attn_block_step(
+                    p["mix"], x, cfg, ctx, name, sin, cos, c["k"], c["v"],
+                    c["kpos"], pos)
+                new_layers.append({"k": kc, "v": vc, "kpos": kp})
+            h = common.apply_norm("rmsnorm", x, p["ffn"]["ln"])
+            x = x + common.mlp(p["ffn"]["mlp"], h, ctx, f"{name}.mlp", cfg.act)
+        x = common.apply_norm("rmsnorm", x, params["final_norm"])
+        logits = x @ params["lm_head"].astype(x.dtype)
+        return logits, {"layers": new_layers}
+
+    def quant_blocks(self, params, batch_tokens):
+        cfg = self.cfg
+        x0 = common.embed_tokens(params["embed"], batch_tokens, cfg.emb_mult)
+        B, S = batch_tokens.shape
+        sin, cos = self._rope(1, S)  # batch-agnostic rope for recon batches
+        mlp_names = ["w_up", "w_down"] + (
+            ["w_gate"] if cfg.act in ("swiglu", "geglu") else [])
+        blocks = []
+        for i, p_l in enumerate(params["layers"]):
+            name = f"layer{i}"
+            sites = {f"{name}.mlp.{n}": Site(("ffn", "mlp", n))
+                     for n in mlp_names}
+            if self.kinds[i] == "R":
+                for n in ("w_x", "w_gate", "w_o"):
+                    sites[f"{name}.{n}"] = Site(("mix", n))
+                for n in ("w_a", "w_i"):
+                    sites[f"{name}.rglru.{n}"] = Site(("mix", "rglru", n))
+            else:
+                for n in ("wq", "wk", "wv", "wo"):
+                    sites[f"{name}.{n}"] = Site(("mix", n))
+
+            def apply_fn(p, x, ctx, _i=i):
+                y, _ = self._layer(_i, p, x, ctx, sin, cos)
+                return y
+
+            blocks.append(BlockHandle(name, p_l, apply_fn, sites))
+
+        def assemble(finalized):
+            out = dict(params)
+            out["layers"] = list(finalized)
+            return out
+
+        return x0, blocks, assemble

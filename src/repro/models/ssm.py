@@ -1,0 +1,287 @@
+"""Mamba2 (state-space duality / SSD) language model.
+
+Implements the chunked SSD algorithm (Dao & Gu 2024, "ssd_minimal") in
+matmul-friendly einsums: intra-chunk quadratic blocks + an inter-chunk state
+recurrence — exactly the structure the MXU wants. Decode is the O(1)-state
+recurrent update, which is why mamba2 runs the long_500k cell.
+
+Quantized sites: in_proj / out_proj (the two big matmuls). conv1d (depthwise,
+tiny), A/dt/D/norm params stay fp — see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.context import QuantCtx
+from repro.core.reconstruct import BlockHandle, Site
+from repro.models import common
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def layer_params(key, cfg, dtype) -> dict:
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_inner + 2 * cfg.ssm_state + n_heads  # z, x, B, C, dt
+    return {
+        "ln": common.norm_params("rmsnorm", D, dtype),
+        "in_proj": jax.random.normal(ks[0], (D, d_proj), dtype) * D**-0.5,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "gate_norm": common.norm_params("rmsnorm", d_inner, dtype),
+        "out_proj": jax.random.normal(ks[2], (d_inner, D), dtype) * d_inner**-0.5,
+    }
+
+
+def _segsum(x):
+    """x (..., T) -> (..., T, T): sum_{j<i..} masked lower-triangular."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dA, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x  (b, s, h, p)   inputs (already multiplied by dt)
+    dA (b, s, h)      per-step log decay (negative)
+    Bm (b, s, n), Cm (b, s, n)  input/output projections (ngroups=1)
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    c = s // chunk
+    xc = x.reshape(b, c, chunk, h, p)
+    Ac = dA.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)  # (b,h,c,l)
+    Bc = Bm.reshape(b, c, chunk, n)
+    Cc = Cm.reshape(b, c, chunk, n)
+
+    A_cum = jnp.cumsum(Ac, axis=-1)
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(Ac))  # (b,h,c,l,l)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, L, xc)
+    # 2. per-chunk end states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)  # (b,h,c,l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xc)
+    # 3. inter-chunk recurrence (sequential scan over chunks)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+    chunk_decay = jnp.exp(A_cum[..., -1])  # (b,h,c)
+
+    def body(carry, inp):
+        st_in = carry
+        st_chunk, dec = inp  # (b,h,p,n), (b,h)
+        st_out = st_in * dec[..., None, None] + st_chunk
+        return st_out, st_in  # emit state *entering* this chunk
+
+    (final_state, prev_states) = jax.lax.scan(
+        body, init_state,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,c,h,p,n)
+    # 4. inter-chunk output contribution
+    state_decay = jnp.exp(A_cum)  # (b,h,c,l)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def _causal_conv(xbc, w, bias):
+    """Depthwise causal conv along seq: xbc (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(K))
+    return out + bias
+
+
+def _split_proj(zxbcdt, cfg):
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim:]
+    return z, xbc, dt
+
+
+def layer_forward(p, u, cfg, ctx: QuantCtx, name: str, init_state=None,
+                  conv_init=None):
+    """Full-sequence mamba2 layer. Returns (y, (conv_tail, final_state))."""
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    B_, S, D = u.shape
+    res = u
+    h = common.apply_norm("rmsnorm", u, p["ln"])
+    zxbcdt = ctx.linear(f"{name}.in_proj", h, p["in_proj"])
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    if conv_init is not None:
+        xbc_ext = jnp.concatenate([conv_init.astype(xbc.dtype), xbc], axis=1)
+        xbc_conv = _causal_conv(xbc_ext, p["conv_w"], p["conv_b"])[:, -S:]
+    else:
+        xbc_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xbc_conv = jax.nn.silu(xbc_conv.astype(jnp.float32))
+    x = xbc_conv[..., :d_inner].reshape(B_, S, n_heads, cfg.ssm_headdim)
+    Bm = xbc_conv[..., d_inner:d_inner + cfg.ssm_state]
+    Cm = xbc_conv[..., d_inner + cfg.ssm_state:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    dA = -jnp.exp(p["a_log"]) * dt  # negative log decay
+    y, final_state = ssd_chunked(x * dt[..., None], dA, Bm, Cm,
+                                 cfg.attn_chunk, init_state)
+    y = y + p["d_skip"][None, None, :, None] * x
+    y = y.reshape(B_, S, d_inner)
+    y = common.rmsnorm((y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype),
+                       p["gate_norm"]["scale"])
+    out = ctx.linear(f"{name}.out_proj", y, p["out_proj"])
+    conv_tail = xbc[:, -(cfg.ssm_conv - 1):, :]  # raw (pre-conv) tail
+    return res + out, (conv_tail, final_state)
+
+
+def layer_decode(p, u, cfg, ctx: QuantCtx, name: str, conv_state, ssm_state):
+    """Single-token step. conv_state (B, K-1, conv_dim) raw inputs;
+    ssm_state (B, H, P, N). Returns (y, conv_state', ssm_state')."""
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    B_, _, D = u.shape
+    res = u
+    h = common.apply_norm("rmsnorm", u, p["ln"])
+    zxbcdt = ctx.linear(f"{name}.in_proj", h, p["in_proj"])
+    z, xbc, dt = _split_proj(zxbcdt, cfg)  # (B,1,*)
+    window = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    conv_state_new = window[:, 1:, :]
+    xbc_conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xbc_conv = jax.nn.silu(xbc_conv)[:, None, :]  # (B,1,conv_dim)
+    x = xbc_conv[..., :d_inner].reshape(B_, n_heads, cfg.ssm_headdim)
+    Bm = xbc_conv[:, 0, d_inner:d_inner + cfg.ssm_state]
+    Cm = xbc_conv[:, 0, d_inner + cfg.ssm_state:]
+
+    dt_ = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    dA = jnp.exp(-jnp.exp(p["a_log"]) * dt_)  # (B,H)
+    xdt = x * dt_[..., None]
+    ssm_new = (ssm_state * dA[..., None, None]
+               + jnp.einsum("bhp,bn->bhpn", xdt, Bm))
+    y = jnp.einsum("bhpn,bn->bhp", ssm_new, Cm) + p["d_skip"][None, :, None] * x
+    y = y.reshape(B_, 1, d_inner)
+    y = common.rmsnorm((y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype),
+                       p["gate_norm"]["scale"])
+    out = ctx.linear(f"{name}.out_proj", y, p["out_proj"])
+    return res + out, conv_state_new, ssm_new
+
+
+class MambaLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        k0, k1, k2 = jax.random.split(key, 3)
+        ks = jax.random.split(k1, cfg.n_layers)
+        return {
+            "embed": jax.random.normal(k0, (cfg.vocab, cfg.d_model), dtype) * 0.02,
+            "layers": jax.vmap(lambda k: layer_params(k, cfg, dtype))(ks),
+            "final_norm": common.norm_params("rmsnorm", cfg.d_model, dtype),
+            "lm_head": jax.random.normal(k2, (cfg.d_model, cfg.vocab), dtype)
+            * cfg.d_model**-0.5,
+        }
+
+    def backbone(self, params, tokens, ctx, collect_state=False):
+        cfg = self.cfg
+        x = common.embed_tokens(params["embed"], tokens)
+
+        def body(carry, p_l):
+            h = carry
+            y, _ = layer_forward(p_l, h, cfg, ctx, "layers")
+            return y, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return common.apply_norm("rmsnorm", x, params["final_norm"])
+
+    def loss(self, params, batch, ctx):
+        x = self.backbone(params, batch["tokens"], ctx)
+        ce = common.fused_cross_entropy(x, params["lm_head"], batch["labels"],
+                                        batch.get("mask"), self.cfg.xent_chunk)
+        return ce, {"ce": ce}
+
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        cfg = self.cfg
+        d_inner, n_heads, conv_dim = _dims(cfg)
+        L = cfg.n_layers
+        return {
+            "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_dim),
+                              jnp.float32),
+            "ssm": jnp.zeros((L, batch, n_heads, cfg.ssm_headdim,
+                              cfg.ssm_state), jnp.float32),
+        }
+
+    def prefill(self, params, tokens, cache, ctx):
+        cfg = self.cfg
+        x = common.embed_tokens(params["embed"], tokens)
+
+        def body(carry, p_l):
+            h = carry
+            y, (conv_tail, state) = layer_forward(p_l, h, cfg, ctx, "layers")
+            return y, (conv_tail, state)
+
+        x, (convs, states) = jax.lax.scan(body, x, params["layers"])
+        cache = {"conv": convs.astype(cache["conv"].dtype),
+                 "ssm": states.astype(cache["ssm"].dtype)}
+        x = common.apply_norm("rmsnorm", x, params["final_norm"])
+        return x[:, -1:], cache
+
+    def decode_step(self, params, token, cache, pos, ctx):
+        cfg = self.cfg
+        x = common.embed_tokens(params["embed"], token)
+
+        def body(carry, inp):
+            h = carry
+            p_l, conv_l, ssm_l = inp
+            y, conv_n, ssm_n = layer_decode(p_l, h, cfg, ctx, "layers",
+                                            conv_l, ssm_l)
+            return y, (conv_n, ssm_n)
+
+        x, (convs, ssms) = jax.lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["ssm"]))
+        cache = {"conv": convs, "ssm": ssms}
+        x = common.apply_norm("rmsnorm", x, params["final_norm"])
+        logits = x @ params["lm_head"].astype(x.dtype)
+        return logits, cache
+
+    def quant_blocks(self, params, batch_tokens):
+        cfg = self.cfg
+        x0 = common.embed_tokens(params["embed"], batch_tokens)
+        blocks = []
+        sites = {"layers.in_proj": Site(("in_proj",)),
+                 "layers.out_proj": Site(("out_proj",))}
+        for i in range(cfg.n_layers):
+            p_l = jax.tree.map(lambda a: a[i], params["layers"])
+            bname = f"layer{i}"
+            bsites = {k.replace("layers", bname, 1): v for k, v in sites.items()}
+
+            def apply_fn(p, x, ctx, _bn=bname):
+                y, _ = layer_forward(p, x, cfg, ctx, _bn)
+                return y
+
+            blocks.append(BlockHandle(bname, p_l, apply_fn, bsites))
+
+        def assemble(finalized):
+            out = dict(params)
+            out["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *finalized)
+            return out
+
+        return x0, blocks, assemble

@@ -1,0 +1,119 @@
+"""AdamW in pure JAX, pytree-generic.
+
+Used by (a) the PTQ reconstruction engine (paper: "We use the Adam optimizer
+for all methods and models") and (b) the pretraining loop.
+
+Distributed-memory feature: ``moment_dtype='int8'`` stores both Adam moments
+block-quantized to int8 (128-element blocks, absmax scales) — an application
+of the paper's own theme to optimizer state, halving-to-quartering optimizer
+HBM at 1000-node scale. Dequantize→update→requantize happens inside the jitted
+step so the fp32 moments are transient.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = None
+    moment_dtype: str = "float32"  # float32 | bfloat16 | int8
+
+
+# ---------------------------------------------------------------- int8 moments
+def _q8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Block-wise absmax int8 quantization of a flat-viewable array."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def _encode_moment(x: jax.Array, dtype: str, second: bool = False):
+    if dtype == "int8":
+        # second moment is non-negative with huge dynamic range: store in
+        # sqrt domain so small-v blocks don't snap to 0 (which would blow up
+        # the m/sqrt(v) update)
+        q, s = _q8(jnp.sqrt(x) if second else x)
+        return {"q": q, "s": s}
+    return x.astype(jnp.dtype(dtype))
+
+
+def _decode_moment(m: Any, dtype: str, shape, second: bool = False) -> jax.Array:
+    if dtype == "int8":
+        d = _dq8(m["q"], m["s"], shape)
+        return jnp.square(d) if second else d
+    return m.astype(jnp.float32)
+
+
+# ----------------------------------------------------------------------- adam
+def adam_init(params: Any, cfg: AdamConfig) -> Any:
+    def one(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return {"m": _encode_moment(z, cfg.moment_dtype),
+                "v": _encode_moment(z, cfg.moment_dtype, second=True)}
+    return {"mu": jax.tree.map(one, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves))) if leaves else jnp.float32(0.0)
+
+
+def adam_update(grads: Any, state: Any, params: Any, cfg: AdamConfig,
+                lr_scale: jax.Array | float = 1.0) -> Tuple[Any, Any, jax.Array]:
+    """Returns (new_params, new_state, grad_norm)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    if cfg.grad_clip is not None:
+        clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * clip, grads)
+
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def one(g, p, mu):
+        g32 = g.astype(jnp.float32)
+        m = _decode_moment(mu["m"], cfg.moment_dtype, p.shape)
+        v = _decode_moment(mu["v"], cfg.moment_dtype, p.shape, second=True)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        upd = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        if cfg.weight_decay:
+            upd = upd + cfg.weight_decay * p32
+        newp = (p32 - lr * upd).astype(p.dtype)
+        return newp, {"m": _encode_moment(m, cfg.moment_dtype),
+                      "v": _encode_moment(v, cfg.moment_dtype, second=True)}
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    out = [one(g, p, mu) for g, p, mu in zip(flat_g, flat_p, flat_mu)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    return new_params, {"mu": new_mu, "count": count}, gnorm

@@ -1,0 +1,155 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Terms (per chip; cost_analysis() on the SPMD module is per-device):
+
+  compute_s    = HLO_FLOPs_per_device / peak_FLOPs
+  memory_s     = HLO_bytes_per_device / HBM_bw
+  collective_s = collective_bytes_per_device / (links * link_bw)
+
+collective bytes are not in cost_analysis: we parse the compiled HLO text and
+sum operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+from repro.configs.shapes import ShapeSpec
+
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+LINK_BW = 50e9
+ICI_LINKS = 1  # conservative: one link's worth of bisection per chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-reduce.5 = f32[16,512]{1,0} all-reduce(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+# tuple-shaped collectives: = (f32[..], f32[..]) all-reduce(...)
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype, 4)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind byte totals (result-shape bytes, per device)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue  # avoid double counting async start/done pairs
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            shapes, kind = m.groups()
+            for dt, dm in _SHAPE_RE.findall(shapes):
+                out[kind] += _shape_bytes(dt, dm)
+    return out
+
+
+def model_flops(cfg, shape: ShapeSpec, n_devices: int) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); D = tokens processed globally.
+    Decode processes global_batch tokens; train/prefill seq*batch. Train
+    includes backward (the 6x already covers fwd+bwd); prefill/decode are
+    forward-only => 2*N*D."""
+    total, active = cfg.param_count()
+    n = active if cfg.is_moe else total
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def analyze_compiled(compiled, cfg, shape: ShapeSpec, mesh,
+                     weights: str = "bf16", mode: str = None,
+                     kv: str = "bf16") -> dict:
+    """Roofline terms for one cell.
+
+    compute/memory use the analytic structural model (roofline/analytic.py)
+    because XLA cost_analysis counts lax.scan bodies once (verified; see
+    EXPERIMENTS.md). Collectives use the compiled HLO with while-trip
+    correction. Raw HLO cost numbers are kept for reference.
+    """
+    from repro.launch.sharding import ARCH_MODE, serve_mode
+    from repro.roofline import analytic
+    from repro.roofline.hlo_parse import collective_bytes_trip_corrected
+
+    if mode is None:
+        mode = (ARCH_MODE.get(cfg.name, "tp") if shape.kind == "train"
+                else serve_mode(cfg.name))
+    # int8 KV is implemented for dense/moe/vlm GQA caches only — don't
+    # flatter the archs that still hold bf16 caches (mla/ssm/hybrid/encdec)
+    if kv == "int8" and not (cfg.family in ("dense", "moe", "vlm")
+                             and not cfg.use_mla):
+        kv = "bf16"
+    n_dev = mesh.devices.size
+    cost = compiled.cost_analysis()
+    raw_flops_dev = float(cost.get("flops", 0.0))
+    raw_bytes_dev = float(cost.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    coll = collective_bytes_trip_corrected(txt)
+    coll_dev = float(sum(coll.values()))
+
+    flops_dev = analytic.flops_cell_total(cfg, shape) / n_dev
+    bytes_dev = analytic.hbm_bytes_cell(cfg, shape, weights, mode=mode,
+                                        n_dev=n_dev, kv=kv) / n_dev
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / (ICI_LINKS * LINK_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mf = analytic.model_flops_ideal(cfg, shape)
+    mf_dev = mf / n_dev
+    return {
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "hlo_raw_flops_per_device": raw_flops_dev,
+        "hlo_raw_bytes_per_device": raw_bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "collective_breakdown": coll,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": bottleneck,
+        "model_flops_global": mf,
+        "model_flops_per_device": mf_dev,
+        "useful_flops_ratio": (mf_dev / flops_dev) if flops_dev else 0.0,
+        "step_time_bound_s": max(terms.values()),
+        "roofline_fraction": (
+            (mf_dev / PEAK_FLOPS) / max(terms.values())
+            if max(terms.values()) > 0 else 0.0),
+    }

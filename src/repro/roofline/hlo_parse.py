@@ -1,0 +1,148 @@
+"""HLO text parsing with while-loop trip-count attribution.
+
+XLA's cost_analysis() counts a while (lax.scan) body ONCE, not xtrips —
+verified empirically (see EXPERIMENTS.md §Roofline methodology). For
+collective bytes we therefore parse the HLO per-computation, attribute each
+collective to its enclosing computation, and multiply by the product of trip
+counts of every while loop that calls it (nested scans compose).
+
+Trip counts come from the loop condition: jax scans lower to
+``compare(counter, constant(L)), direction=LT``; we resolve the s32 constant.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"%?([\w.\-]+)\s*=\s*s32\[\]\s+constant\((\d+)\)")
+_CMP_RE = re.compile(r"compare\((?:[^)]*%([\w.\-]+))?[^)]*\), direction=LT")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype, 4)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def split_computations(txt: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in txt.splitlines():
+        stripped = line.strip()
+        if not line.startswith(" ") and ("->" in line) and ("{" in line):
+            m = _COMP_START.match(stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None and stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _collect_constants(txt: str) -> Dict[str, int]:
+    return {m.group(1): int(m.group(2)) for m in _CONST_RE.finditer(txt)}
+
+
+def _cond_trip_count(cond_name: str, comps: Dict[str, List[str]],
+                     consts: Dict[str, int]) -> int:
+    """Find the LT-compare bound inside the condition (following one level of
+    fusion call indirection)."""
+    seen = set()
+    stack = [cond_name]
+    while stack:
+        name = stack.pop()
+        if name in seen or name not in comps:
+            continue
+        seen.add(name)
+        for line in comps[name]:
+            if "compare(" in line and "direction=LT" in line:
+                # operands: last %name that resolves to an s32 constant
+                for ref in re.findall(r"%([\w.\-]+)", line):
+                    if ref in consts:
+                        return consts[ref]
+            for m in _CALL_RE.finditer(line):
+                stack.append(m.group(1))
+    return 1
+
+
+def while_trip_multipliers(txt: str) -> Dict[str, int]:
+    """computation name -> product of trip counts of enclosing whiles."""
+    comps = split_computations(txt)
+    consts = _collect_constants(txt)
+    # edges: computation -> called computations (with weight = trips if while)
+    mult: Dict[str, int] = {name: 1 for name in comps}
+
+    # build call graph with while-weighted edges, then propagate from roots
+    edges: Dict[str, List[Tuple[str, int]]] = {n: [] for n in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.groups()
+                trips = _cond_trip_count(cond, comps, consts)
+                edges[name].append((body, trips))
+                edges[name].append((cond, trips))
+            else:
+                for m in _CALL_RE.finditer(line):
+                    callee = m.group(1)
+                    if callee in comps:
+                        edges[name].append((callee, 1))
+
+    # propagate multipliers down the call graph (DAG; cycles guarded)
+    import collections
+    result: Dict[str, int] = collections.defaultdict(int)
+
+    def dfs(name: str, factor: int, depth: int = 0):
+        if depth > 50:
+            return
+        result[name] = max(result[name], factor)
+        for callee, trips in edges.get(name, []):
+            dfs(callee, factor * trips, depth + 1)
+
+    roots = [n for n in comps if "main" in n or n.startswith("jit")]
+    if not roots:
+        roots = list(comps)[:1]
+    for r in roots:
+        dfs(r, 1)
+    return dict(result)
+
+
+def collective_bytes_trip_corrected(txt: str) -> Dict[str, float]:
+    """Per-collective-kind bytes, multiplied by enclosing-scan trip counts."""
+    comps = split_computations(txt)
+    mults = while_trip_multipliers(txt)
+    out: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    for name, lines in comps.items():
+        factor = mults.get(name, 1)
+        for line in lines:
+            if "-done" in line:
+                continue
+            for kind in COLLECTIVES:
+                if re.search(rf"\b{kind}(-start)?\(", line):
+                    lhs = line.split("=", 1)[0] + "= " + \
+                        line.split("=", 1)[1].split(kind)[0]
+                    for dt, dm in _SHAPE_RE.findall(lhs):
+                        out[kind] += _shape_bytes(dt, dm) * factor
+                    break
+    return out

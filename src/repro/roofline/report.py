@@ -1,0 +1,103 @@
+"""Render dryrun_results.json into the EXPERIMENTS.md §Dry-run/§Roofline
+tables.
+
+Usage: PYTHONPATH=src python -m repro.roofline.report [results.json ...]
+Multiple files merge (later files override same cell ids) so hillclimb
+variants can be layered over the baseline sweep.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+GiB = 2**30
+
+
+def load(paths: List[str]) -> Dict[str, dict]:
+    cells: Dict[str, dict] = {}
+    for p in paths:
+        with open(p) as f:
+            for r in json.load(f):
+                cells[r["cell"]] = r
+    return cells
+
+
+def _fix(cell: dict) -> dict:
+    a = cell["analysis"]
+    dom = a["bottleneck"]
+    hints = {
+        "compute": "raise arithmetic intensity (fuse, larger tiles) or "
+                   "shard over more chips",
+        "memory": "cut bytes: lower-precision weights/cache (FlexRound int8/"
+                  "int4), fuse elementwise chains, avoid re-read of "
+                  "activations",
+        "collective": "reshard to remove resharding collectives, overlap "
+                      "comm with compute, compress gradients",
+    }
+    return hints[dom]
+
+
+def markdown(cells: Dict[str, dict], mesh_filter: str = "16x16") -> str:
+    rows = []
+    head = ("| cell | peak GiB/dev | compute s | memory s | collective s | "
+            "bottleneck | MODEL/HLO flops | roofline frac | one-line fix |")
+    sep = "|" + "---|" * 9
+    for cid, r in sorted(cells.items()):
+        if r["status"] == "skipped":
+            rows.append(f"| {cid} | — | — | — | — | skipped | — | — | "
+                        f"{r['reason'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {cid} | ERROR {r.get('error', '')[:60]} "
+                        "| | | | | | | |")
+            continue
+        if mesh_filter and f"|{mesh_filter}|" not in f"|{cid}|".replace(
+                cid, cid):
+            pass
+        a = r["analysis"]
+        rows.append(
+            f"| {cid} | {r['memory']['peak_bytes_per_device']/GiB:.2f} "
+            f"| {a['compute_s']:.2e} | {a['memory_s']:.2e} "
+            f"| {a['collective_s']:.2e} | {a['bottleneck']} "
+            f"| {a['useful_flops_ratio']:.2f} | {a['roofline_fraction']:.4f} "
+            f"| {_fix(r)} |")
+    return "\n".join([head, sep] + rows)
+
+
+def summary(cells: Dict[str, dict]) -> str:
+    ok = [r for r in cells.values() if r["status"] == "ok"]
+    sk = [r for r in cells.values() if r["status"] == "skipped"]
+    er = [r for r in cells.values() if r["status"] == "error"]
+    lines = [f"{len(ok)} compiled OK, {len(sk)} skipped (per assignment), "
+             f"{len(er)} errors."]
+    by_b = {}
+    for r in ok:
+        by_b.setdefault(r["analysis"]["bottleneck"], []).append(r["cell"])
+    for b, cs in sorted(by_b.items()):
+        lines.append(f"  {b}-bound: {len(cs)} cells")
+    worst = sorted(ok, key=lambda r: r["analysis"]["roofline_fraction"])[:5]
+    lines.append("  worst roofline fractions: " + ", ".join(
+        f"{r['cell']}={r['analysis']['roofline_fraction']:.4f}"
+        for r in worst))
+    over = [r for r in ok
+            if r["memory"]["peak_bytes_per_device"] > 16 * GiB]
+    lines.append(f"  cells over 16GiB v5e HBM: {len(over)}")
+    for r in sorted(over, key=lambda r: -r["memory"]["peak_bytes_per_device"]):
+        lines.append(f"    {r['cell']}: "
+                     f"{r['memory']['peak_bytes_per_device']/GiB:.1f} GiB")
+    return "\n".join(lines)
+
+
+def main():
+    paths = sys.argv[1:] or ["dryrun_results.json"]
+    cells = load(paths)
+    print(summary(cells))
+    print()
+    print(markdown(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Attention primitive tests: chunked online-softmax (+causal q-chunking)
+vs the dense oracle, GQA, local windows, decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn
+
+KEY = jax.random.key(0)
+
+
+def _qkv(B=2, S=64, Hq=4, Hkv=2, D=16, Dv=None, key=KEY):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(k2, (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(k3, (B, S, Hkv, Dv or D), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_matches_full(chunk, causal):
+    q, k, v = _qkv()
+    got = attn.attention(q, k, v, causal=causal, chunk=chunk)
+    want = attn.attention_full(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_causal_qchunk_path_triggered_and_exact():
+    """S >> chunk triggers the q-chunked causal-skip path."""
+    q, k, v = _qkv(S=128)
+    got = attn.attention(q, k, v, causal=True, chunk=16)
+    want = attn.attention_full(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_local_window():
+    q, k, v = _qkv(S=64)
+    got = attn.attention(q, k, v, causal=True, window=8, chunk=16)
+    want = attn.attention_full(q, k, v, causal=True, window=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_mla_style_asymmetric_v_dim():
+    q, k, v = _qkv(D=24, Dv=16)
+    got = attn.attention(q, k, v, causal=True, chunk=16)
+    want = attn.attention_full(q, k, v, causal=True)
+    assert got.shape[-1] == 16
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_kv_len_masking_matches_truncation():
+    q, k, v = _qkv(S=64)
+    q1 = q[:, :1]
+    got = attn.attention(q1, k, v, causal=False, chunk=16,
+                         kv_len=jnp.int32(40))
+    want = attn.attention_full(q1, k[:, :40], v[:, :40], causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_matches_full_last_position():
+    q, k, v = _qkv(S=32)
+    out_full = attn.attention_full(q, k, v, causal=True)
+    got = attn.decode_attention(q[:, -1:], k, v, jnp.int32(31))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(out_full[:, -1:]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_uneven_kv_padding():
+    q, k, v = _qkv(S=40)  # 40 % 16 != 0 -> internal padding
+    got = attn.attention(q, k, v, causal=False, chunk=16)
+    want = attn.attention_full(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

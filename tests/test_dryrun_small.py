@@ -1,0 +1,56 @@
+"""Sharding + dry-run machinery test at CI scale.
+
+Runs in a SUBPROCESS with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(the flag must precede jax import and must not leak into other tests), using
+reduced configs on debug meshes (2,4) and (2,2,2): lower + compile every
+family x step-kind, single- and multi-pod.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, json, sys
+import jax
+from repro.configs import get_smoke_config, get_shape
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.steps import build_cell
+
+archs = ["smollm-135m", "deepseek-v3-671b", "mamba2-130m",
+         "recurrentgemma-2b", "whisper-medium", "phi-3-vision-4.2b"]
+train = dataclasses.replace(get_shape("train_4k"), seq_len=64, global_batch=8)
+dec = dataclasses.replace(get_shape("decode_32k"), seq_len=64, global_batch=8)
+out = []
+for mp in (False, True):
+    mesh = make_debug_mesh(multi_pod=mp)
+    for arch in archs:
+        cfg = get_smoke_config(arch)
+        for shp, w in ((train, "bf16"), (dec, "int8")):
+            prog = build_cell(cfg, shp, mesh, weights=w)
+            with mesh:
+                c = jax.jit(prog.fn, in_shardings=prog.in_shardings,
+                            out_shardings=prog.out_shardings,
+                            donate_argnums=prog.donate_argnums
+                            ).lower(*prog.args).compile()
+            ca = c.cost_analysis()
+            out.append({"arch": arch, "kind": shp.kind, "mp": mp,
+                        "flops": float(ca.get("flops", 0))})
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_machinery_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    rows = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert len(rows) == 24  # 6 archs x 2 kinds x 2 meshes
+    assert all(r["flops"] > 0 for r in rows)

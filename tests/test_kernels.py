@@ -1,0 +1,110 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes and dtypes (per-kernel allclose requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flexround, rtn
+from repro.core.quant_config import QuantConfig
+from repro.kernels import ref
+from repro.kernels.dequant_matmul_w4 import dequant_matmul_w4
+from repro.kernels.flexround_quant import flexround_quant
+from repro.kernels.qmatmul_int8 import qmatmul_int8
+
+KEY = jax.random.key(0)
+
+SHAPES_MN = [(8, 128), (64, 256), (100, 384), (256, 512)]
+SHAPES_MKN = [(8, 128, 128), (32, 256, 128), (64, 512, 384), (16, 130, 256)]
+
+
+@pytest.mark.parametrize("shape", SHAPES_MN)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("per_channel", [False, True])
+def test_flexround_quant_kernel(shape, dtype, per_channel):
+    M, N = shape
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    w = (jax.random.normal(k1, (M, N), jnp.float32) * 0.1).astype(dtype)
+    s2 = jnp.exp(0.05 * jax.random.normal(k2, (M, N), jnp.float32))
+    if per_channel:
+        s1 = jnp.exp(jax.random.normal(k3, (1, N)) * 0.1) * 0.01
+        zero = jnp.round(jax.random.uniform(k3, (1, N)) * 8)
+    else:
+        s1 = jnp.full((1, 1), 0.01, jnp.float32)
+        zero = jnp.full((1, 1), 7.0, jnp.float32)
+    s3 = jnp.exp(0.05 * jax.random.normal(k3, (1, N), jnp.float32))
+    got = flexround_quant(w, s1, s2, s3, zero, qmin=0, qmax=15,
+                          block_m=64, block_n=128, interpret=True)
+    want = ref.flexround_quant_ref(w, s1, s2, s3, zero, 0, 15)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flexround_kernel_matches_core_apply():
+    """Kernel forward == core.flexround.apply forward (per-tensor symmetric)."""
+    qcfg = QuantConfig(bits=4, symmetric=True, observer="minmax")
+    w = jax.random.normal(KEY, (64, 128), jnp.float32) * 0.2
+    st = flexround.init(w, qcfg)
+    st = dict(st, s2=jnp.exp(0.03 * jax.random.normal(KEY, w.shape)))
+    want = flexround.apply(w, st, qcfg)
+    got = flexround_quant(
+        w, jnp.broadcast_to(st["s1"], (1, 128)), st["s2"],
+        jnp.broadcast_to(st["s3"], (1, 128)),
+        jnp.broadcast_to(st["zero"], (1, 128)),
+        qmin=qcfg.qmin, qmax=qcfg.qmax, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("mkn", SHAPES_MKN)
+@pytest.mark.parametrize("per_channel", [False, True])
+def test_qmatmul_int8_kernel(mkn, per_channel):
+    M, K, N = mkn
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    a_q = jax.random.randint(k1, (M, K), -128, 128, jnp.int8)
+    b_q = jax.random.randint(k2, (K, N), -128, 128, jnp.int8)
+    a_scale, a_zero = jnp.float32(0.05), jnp.float32(3.0)
+    b_scale = (jnp.exp(jax.random.normal(k3, (1, N)) * 0.2) * 0.01
+               if per_channel else jnp.full((1, 1), 0.01))
+    got = qmatmul_int8(a_q, b_q, a_scale, a_zero, b_scale,
+                       block_m=32, block_n=128, block_k=64, interpret=True)
+    want = ref.qmatmul_int8_ref(a_q, b_q, a_scale, a_zero, b_scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mkn", [(8, 128, 128), (32, 256, 256),
+                                 (64, 512, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dequant_matmul_w4_kernel(mkn, dtype):
+    M, K, N = mkn
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = (jax.random.normal(k1, (M, K), jnp.float32) * 0.5).astype(dtype)
+    codes = jax.random.randint(k2, (K // 2, N), 0, 256).astype(jnp.uint8)
+    scale = jnp.exp(jax.random.normal(k3, (1, N)) * 0.2) * 0.02
+    zero = jnp.round(jax.random.uniform(k3, (1, N)) * 15)
+    got = dequant_matmul_w4(x, codes, scale, zero, block_m=32, block_n=128,
+                            block_k=128, interpret=True)
+    want = ref.dequant_matmul_w4_ref(x, codes, scale, zero)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_qtensor_matmul_paths():
+    """ops.qtensor_matmul agrees with dequant matmul for int8 and int4."""
+    from repro.kernels import ops as kops
+    for bits in (8, 4):
+        qcfg = QuantConfig(bits=bits, symmetric=False, observer="minmax",
+                           granularity="per_channel")
+        w = jax.random.normal(KEY, (128, 64), jnp.float32) * 0.1
+        st = rtn.init(w, qcfg)
+        qt = rtn.export(w, st, qcfg, dtype=jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (4, 16, 128), jnp.float32)
+        from repro.core.qtensor import dequantize_qtensor
+        want = x @ dequantize_qtensor(qt)
+        got = kops.qtensor_matmul(x, qt, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)

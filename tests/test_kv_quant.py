@@ -1,0 +1,34 @@
+"""int8 KV-cache decode path: consistency vs bf16 cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.context import QuantCtx
+from repro.models import build_model
+
+B, S = 2, 32
+
+
+def test_int8_kv_cache_decode_close_to_bf16():
+    cfg = get_smoke_config("qwen2.5-14b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    ctx = QuantCtx(mode="fp")
+
+    outs = {}
+    for quant in (False, True):
+        cache = model.init_cache(B, S + 4, kv_quant=quant)
+        _, cache = model.prefill(params, tokens[:, :-1], cache, ctx)
+        logits, _ = model.decode_step(params, tokens[:, -1:], cache,
+                                      jnp.int32(S - 1), ctx)
+        outs[quant] = np.asarray(logits, np.float32)
+
+    # int8 cache must match bf16 cache decode closely (per-token scales)
+    denom = np.abs(outs[False]).max()
+    rel = np.abs(outs[True] - outs[False]).max() / denom
+    assert rel < 0.05, f"int8 KV divergence {rel:.3f}"
+    # and greedy tokens should agree
+    np.testing.assert_array_equal(outs[True].argmax(-1),
+                                  outs[False].argmax(-1))

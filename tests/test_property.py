@@ -1,0 +1,121 @@
+"""Hypothesis property-based tests on quantization invariants."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flexround, observers, rtn
+from repro.core import quantizer as qz
+from repro.core.qtensor import dequantize_qtensor, from_codes
+from repro.core.quant_config import QuantConfig
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+weights = hnp.arrays(
+    np.float32, st.tuples(st.integers(2, 24), st.integers(2, 24)),
+    elements=st.floats(-10, 10, width=32, allow_nan=False))
+
+qconfigs = st.builds(
+    QuantConfig,
+    bits=st.integers(2, 8),
+    symmetric=st.booleans(),
+    granularity=st.sampled_from(["per_tensor", "per_channel"]),
+    observer=st.sampled_from(["minmax", "mse"]),
+)
+
+
+@hypothesis.given(weights, qconfigs)
+def test_fake_quant_idempotent(w, qcfg):
+    """quant(dequant(quant(x))) == quant(x) — fake-quant is a projection."""
+    w = jnp.asarray(w)
+    s, z = observers.init_scale(w, qcfg)
+    w1 = qz.fake_quant(w, s, z, qcfg, ste=False)
+    w2 = qz.fake_quant(w1, s, z, qcfg, ste=False)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2),
+                               rtol=1e-5, atol=1e-6)
+
+
+@hypothesis.given(weights, qconfigs)
+def test_observer_scale_positive_and_codes_in_range(w, qcfg):
+    w = jnp.asarray(w)
+    s, z = observers.init_scale(w, qcfg)
+    assert bool(jnp.all(s > 0))
+    q = qz.quantize(w, s, z, qcfg, ste=False)
+    assert float(q.min()) >= qcfg.qmin and float(q.max()) <= qcfg.qmax
+
+
+@hypothesis.given(weights, st.integers(2, 8), st.booleans())
+def test_minmax_error_bound(w, bits, sym):
+    """RTN error <= s/2 inside the representable range (minmax observer)."""
+    qcfg = QuantConfig(bits=bits, symmetric=sym, observer="minmax")
+    w = jnp.asarray(w)
+    s, z = observers.init_scale(w, qcfg)
+    what = qz.fake_quant(w, s, z, qcfg, ste=False)
+    # symmetric minmax clips nothing except via rounding at the edges
+    bound = float(s.reshape(())) * 0.5 + 1e-4 if qcfg.granularity == \
+        "per_tensor" else None
+    err = jnp.abs(w - what)
+    if not sym:
+        assert float(jnp.max(err)) <= float(jnp.max(s)) * 0.5 + 1e-4
+    else:
+        assert float(jnp.max(err)) <= float(jnp.max(s)) * 0.5 + 1e-4
+
+
+@hypothesis.given(weights, qconfigs)
+def test_flexround_init_is_rtn(w, qcfg):
+    w = jnp.asarray(w)
+    st_f = flexround.init(w, qcfg)
+    st_r = rtn.init(w, qcfg)
+    np.testing.assert_array_equal(
+        np.asarray(flexround.apply(w, st_f, qcfg)),
+        np.asarray(rtn.apply(w, st_r, qcfg)))
+
+
+@hypothesis.given(weights, qconfigs, st.floats(0.3, 3.0))
+def test_flexround_scale_invariance_of_grid(w, qcfg, alpha):
+    """Scaling S' leaves the reconstruction GRID unchanged (outputs are
+    always integer multiples of s1 shifted by zero)."""
+    w = jnp.asarray(w)
+    st_ = flexround.init(w, qcfg)
+    st2 = dict(st_, s2=st_["s2"] * alpha)
+    what = flexround.apply(w, st2, qcfg)
+    codes = what / st_["s1"]
+    np.testing.assert_allclose(np.asarray(codes),
+                               np.round(np.asarray(codes)), atol=1e-3)
+
+
+@hypothesis.given(weights, st.integers(2, 8), st.booleans())
+def test_qtensor_export_roundtrip(w, bits, sym):
+    qcfg = QuantConfig(bits=bits, symmetric=sym, observer="minmax")
+    w = jnp.asarray(w)
+    if bits <= 4 and w.shape[0] % 2:
+        w = jnp.pad(w, ((0, 1), (0, 0)))
+    st_ = rtn.init(w, qcfg)
+    qt = rtn.export(w, st_, qcfg, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(dequantize_qtensor(qt)),
+                               np.asarray(rtn.apply(w, st_, qcfg)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(hnp.arrays(np.float32, st.integers(4, 300),
+                             elements=st.floats(-100, 100, width=32,
+                                                allow_nan=False)))
+def test_int8_moment_roundtrip_bounded(g):
+    from repro.optim.adam import _dq8, _q8
+    g = jnp.asarray(g)
+    q, s = _q8(g)
+    d = _dq8(q, s, g.shape)
+    assert float(jnp.max(jnp.abs(g - d))) <= float(jnp.max(jnp.abs(g))) / 127 \
+        + 1e-6
+
+
+@hypothesis.given(st.integers(1, 4096), st.integers(1, 2048))
+def test_moe_group_divides(tokens, target):
+    from repro.models.moe import _pick_group
+    n = _pick_group(tokens, target)
+    assert 1 <= n <= max(1, min(target, tokens)) and tokens % n == 0

@@ -1,0 +1,191 @@
+"""Unit tests for quantizer primitives, observers, and rounding methods."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adaquant, adaround, flexround, methods, observers, rtn
+from repro.core import quantizer as qz
+from repro.core.qtensor import dequantize_qtensor
+from repro.core.quant_config import QuantConfig
+
+jax.config.update("jax_enable_x64", False)
+
+KEY = jax.random.key(0)
+
+
+def _w(shape=(64, 32), scale=0.1, key=KEY):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+# ------------------------------------------------------------------ primitives
+def test_ste_round_grad_identity():
+    g = jax.grad(lambda x: jnp.sum(qz.ste_round(x) * 3.0))(jnp.arange(4.0))
+    np.testing.assert_allclose(g, 3.0 * np.ones(4))
+
+
+def test_quantize_range():
+    for sym in (True, False):
+        qcfg = QuantConfig(bits=4, symmetric=sym)
+        w = _w() * 10
+        s, z = observers.minmax_scale(w, qcfg)
+        q = qz.quantize(w, s, z, qcfg, ste=False)
+        assert q.min() >= qcfg.qmin and q.max() <= qcfg.qmax
+
+
+def test_rtn_error_bound():
+    """|w - ŵ| <= s/2 for values inside the clipping range (minmax observer)."""
+    qcfg = QuantConfig(bits=8, symmetric=False, observer="minmax")
+    w = _w()
+    s, z = observers.minmax_scale(w, qcfg)
+    what = qz.fake_quant(w, s, z, qcfg, ste=False)
+    assert float(jnp.max(jnp.abs(w - what))) <= float(s.reshape(())) * 0.5 + 1e-6
+
+
+def test_mse_observer_beats_or_ties_minmax():
+    # heavy-tailed weights: range shrinking should help
+    w = jax.random.t(KEY, df=2.0, shape=(128, 64)).astype(jnp.float32)
+    qcfg_mm = QuantConfig(bits=4, symmetric=True, observer="minmax")
+    qcfg_ms = QuantConfig(bits=4, symmetric=True, observer="mse")
+    s0, z0 = observers.init_scale(w, qcfg_mm)
+    s1, z1 = observers.init_scale(w, qcfg_ms)
+    e0 = jnp.mean((w - qz.fake_quant(w, s0, z0, qcfg_mm, ste=False)) ** 2)
+    e1 = jnp.mean((w - qz.fake_quant(w, s1, z1, qcfg_ms, ste=False)) ** 2)
+    assert float(e1) <= float(e0) + 1e-9
+
+
+def test_per_channel_shapes():
+    qcfg = QuantConfig(bits=8, granularity="per_channel")
+    w = _w((16, 8))
+    s, z = observers.init_scale(w, qcfg)
+    assert s.shape == (1, 8)
+    qcfg_b = QuantConfig(bits=8, granularity="per_channel", batch_dims=1)
+    w3 = _w((4, 16, 8))
+    s3, _ = observers.init_scale(w3, qcfg_b)
+    assert s3.shape == (4, 1, 8)
+
+
+# ------------------------------------------------------------------ flexround
+def test_flexround_init_equals_rtn():
+    for sym, gran in [(True, "per_tensor"), (False, "per_tensor"),
+                      (False, "per_channel")]:
+        qcfg = QuantConfig(bits=4, symmetric=sym, granularity=gran)
+        w = _w()
+        st_f = flexround.init(w, qcfg)
+        st_r = rtn.init(w, qcfg)
+        np.testing.assert_allclose(flexround.apply(w, st_f, qcfg),
+                                   rtn.apply(w, st_r, qcfg), rtol=0, atol=0)
+
+
+def test_flexround_conv_has_s4():
+    qcfg = QuantConfig(bits=4, symmetric=True)
+    w = _w((3, 3, 8, 16))
+    st = flexround.init(w, qcfg)
+    assert st["s3"].shape == (1, 1, 1, 16)
+    assert st["s4"].shape == (1, 1, 8, 1)
+    out = flexround.apply(w, st, qcfg)
+    assert out.shape == w.shape
+
+
+def test_proposition_3_1_gradient_identity():
+    """dL/dS2 == -(W / (S2..)^2 / s1... ) * s1 * dL/dq  — check the exact
+    reciprocal-rule form: grad wrt s2 equals -(W * g / (s1 * s2^2 * s3)) for
+    in-range weights, where g = dL/dŴ."""
+    qcfg = QuantConfig(bits=8, symmetric=True, observer="minmax")  # nothing clips
+    w = _w((32, 16), scale=0.05)
+    st = flexround.init(w, qcfg)
+    # move away from init so s2 != 1 uniformly
+    st = dict(st, s2=st["s2"] * jnp.exp(0.01 * jax.random.normal(KEY, w.shape)))
+    tgt = _w((32, 16), key=jax.random.key(1))
+
+    def loss(s2):
+        what = flexround.apply(w, dict(st, s2=s2), qcfg)
+        return 0.5 * jnp.sum((what - tgt) ** 2)
+
+    g_auto = jax.grad(loss)(st["s2"])
+    what = flexround.apply(w, st, qcfg)
+    dL_dWhat = what - tgt
+    s1, s2, s3 = st["s1"], st["s2"], st["s3"]
+    # only strictly-in-range entries carry the reciprocal-rule gradient;
+    # clipped entries have zero autodiff grad (hard clamp), as in the paper.
+    codes = w / (s1 * s2 * s3)
+    inr = (codes > qcfg.qmin + 0.5) & (codes < qcfg.qmax - 0.5)
+    # dŴ/ds2 = s1 * W/(s1*s3) * d(1/s2)/ds2 = -W/(s2^2 s3)
+    g_manual = jnp.where(inr, -(w / (s2**2 * s3)) * dL_dWhat, 0.0)
+    np.testing.assert_allclose(np.where(inr, g_auto, 0.0), g_manual,
+                               rtol=1e-4, atol=1e-6)
+    # and the proportionality to W the paper highlights:
+    nz = inr & (jnp.abs(dL_dWhat) > 1e-6) & (jnp.abs(w) > 1e-6)
+    sign_ok = jnp.sign(g_auto) == -jnp.sign(w * dL_dWhat)
+    assert float(jnp.mean(jnp.where(nz, sign_ok, True))) > 0.99
+
+
+def test_flexround_can_shift_more_than_one_grid():
+    """FlexRound with S' != 1 reaches codes beyond RTN±1 (paper Fig. 3-5);
+    AdaRound structurally cannot."""
+    qcfg = QuantConfig(bits=8, symmetric=True)
+    w = _w((32, 16), scale=0.2)
+    st = flexround.init(w, qcfg)
+    rtn_codes = jnp.round(w / st["s1"])
+    st2 = dict(st, s2=st["s2"] * 0.7)  # divide less -> bigger codes
+    fr_codes = flexround.codes(w, st2, qcfg, ste=False)
+    shifts = jnp.abs(fr_codes - rtn_codes)
+    assert float(jnp.max(shifts)) > 1.0
+
+    ada = adaround.init(w, qcfg)
+    lo = jnp.floor(w / ada["s1"])
+    inr = (lo >= qcfg.qmin) & (lo + 1 <= qcfg.qmax)  # ignore clip saturation
+    for v in (-10.0, 10.0):
+        st_a = dict(ada, v=jnp.full_like(w, v))
+        q = adaround._codes(w, st_a, qcfg, hard=True)
+        # up or down only (within the grid)
+        assert float(jnp.max(jnp.where(inr, jnp.abs(q - lo), 0.0))) <= 1.0
+
+
+# ------------------------------------------------------- method common checks
+@pytest.mark.parametrize("name", ["rtn", "adaround", "adaquant", "flexround"])
+@pytest.mark.parametrize("sym,gran", [(True, "per_tensor"), (False, "per_channel")])
+def test_method_roundtrip_and_export(name, sym, gran):
+    qcfg = QuantConfig(bits=4, symmetric=sym, granularity=gran)
+    m = methods.get(name)
+    w = _w((16, 8))
+    st = m.init(w, qcfg)
+    what = m.apply(w, st, qcfg)
+    assert what.shape == w.shape and what.dtype == w.dtype
+    assert not bool(jnp.any(jnp.isnan(what)))
+    qt = m.export(w, st, qcfg, dtype=jnp.float32)
+    wd = dequantize_qtensor(qt)
+    assert wd.shape == w.shape
+    # export == apply at init for rtn/flexround (no soft states)
+    if name in ("rtn", "flexround"):
+        np.testing.assert_allclose(wd, what, rtol=1e-5, atol=1e-6)
+
+
+def test_int4_packing_roundtrip():
+    qcfg = QuantConfig(bits=4, symmetric=False)
+    w = _w((16, 8))
+    st = rtn.init(w, qcfg)
+    qt = rtn.export(w, st, qcfg, dtype=jnp.float32)
+    assert qt.packed and qt.codes.shape == (8, 8)
+    np.testing.assert_allclose(dequantize_qtensor(qt), rtn.apply(w, st, qcfg),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_adaquant_learns_scale():
+    qcfg = QuantConfig(bits=4, symmetric=True)
+    w = _w()
+    st = adaquant.init(w, qcfg)
+    g = jax.grad(lambda s1: jnp.sum(adaquant.apply(w, dict(st, s1=s1), qcfg)))(
+        st["s1"])
+    assert float(jnp.sum(jnp.abs(g))) > 0.0  # s1 gets gradient (unlike AdaRound)
+
+
+def test_adaround_regularizer_anneals():
+    from repro.core.quant_config import QuantRecipe
+    qcfg = QuantConfig(bits=4, symmetric=True)
+    recipe = QuantRecipe(method="adaround", iters=100)
+    w = _w()
+    st = adaround.init(w, qcfg)
+    r_warm = adaround.loss_extra(st, qcfg, 0, recipe)
+    r_mid = adaround.loss_extra(st, qcfg, 50, recipe)
+    assert float(r_warm) == 0.0 and float(r_mid) > 0.0
