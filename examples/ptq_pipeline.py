@@ -3,10 +3,15 @@
   1. pretrain a small LM on the synthetic corpus (cached),
   2. block-by-block FlexRound reconstruction (per-channel asymmetric weights,
      per-tensor activations, QDrop setting — the LLaMA recipe of Table 7),
+     with a per-site SiteRule keeping the first layer at 8-bit (the standard
+     mixed-precision LLM recipe; pass --no-rules for uniform bits),
   3. export integer weights (QTensor), with per-block fault-tolerant
      checkpoints, and compare perplexity against the fp model and RTN.
 
     PYTHONPATH=src python examples/ptq_pipeline.py [--method flexround]
+
+Any method registered via ``method_api.register_method`` is accepted by
+--method; this script has no hard-coded method list.
 """
 import argparse
 import sys
@@ -17,15 +22,17 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 import jax
 
 from benchmarks import common
-from repro.core import QuantRecipe
+from repro.core import QuantRecipe, method_api
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--method", default="flexround",
-                    choices=["rtn", "adaround", "adaquant", "flexround"])
+                    choices=list(method_api.available_methods()))
     ap.add_argument("--w-bits", type=int, default=4)
     ap.add_argument("--iters", type=int, default=200)
+    ap.add_argument("--no-rules", action="store_true",
+                    help="uniform precision (skip the W8 first-layer rule)")
     ap.add_argument("--ckpt", default="/tmp/ptq_ckpt")
     args = ap.parse_args()
 
@@ -34,11 +41,16 @@ def main():
     fp_ppl = common.eval_ppl(model, params)
     print(f"   fp perplexity: {fp_ppl:.3f}")
 
+    # per-site rule: keep the most quantization-sensitive first layer at W8
+    # (glob over site names; later rules would win over earlier ones)
+    rules = () if args.no_rules else ("layers.0.*:w_bits=8",)
     print(f"2) block-wise PTQ: {args.method}, W{args.w_bits} per-channel "
-          f"asym + A8 per-tensor (QDrop setting), ckpt -> {args.ckpt}")
+          f"asym + A8 per-tensor (QDrop setting), rules={rules}, "
+          f"ckpt -> {args.ckpt}")
     recipe = QuantRecipe(method=args.method, setting="qdrop",
                          w_bits=args.w_bits, w_granularity="per_channel",
-                         a_bits=8, iters=args.iters, lr=3e-3, batch_size=16)
+                         a_bits=8, iters=args.iters, lr=3e-3, batch_size=16,
+                         rules=rules)
     from repro.data import CalibrationSet, SyntheticTokens
     from repro.core.reconstruct import quantize_blocks
     src = SyntheticTokens(vocab=common.BENCH_CFG.vocab, seq_len=common.SEQ)

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core import QuantRecipe
+from repro.core import QuantRecipe, method_api
 from repro.core.context import QuantCtx
 from repro.core.reconstruct import finalize_block, reconstruct_block
 from repro.models import build_model
@@ -30,7 +30,7 @@ def main():
 
     print(f"block: {block.name}, sites: {list(block.sites)}")
     print(f"{'method':12s} {'recon before':>14s} {'recon after':>14s}")
-    for method in ("rtn", "adaquant", "adaround", "flexround"):
+    for method in method_api.available_methods():  # every registered method
         recipe = QuantRecipe(method=method, w_bits=4, w_symmetric=True,
                              a_bits=None, iters=200, lr=3e-3, batch_size=16)
         ws, _, rep = reconstruct_block(block, recipe, x0, y_fp,

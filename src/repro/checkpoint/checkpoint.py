@@ -146,7 +146,11 @@ class PTQCheckpointer:
     def path(self) -> str:
         return os.path.join(self.dir, "ptq_state")
 
-    def save(self, next_block: int, finalized, astates, reports, x_fp, x_q):
+    def save(self, next_block: int, finalized, astates, reports, x_fp, x_q,
+             plans: Optional[list] = None):
+        """``plans``: per-finalized-block {site: SitePlan.summary()} dicts —
+        recorded so a resume under different rules fails loudly instead of
+        silently mixing bit-widths."""
         tree = {
             "finalized": finalized,
             "astates": astates,
@@ -156,6 +160,7 @@ class PTQCheckpointer:
         meta = {
             "next_block": next_block,
             "reports": [dataclasses.asdict(r) for r in reports],
+            "plans": plans or [],
         }
         save_pytree(self.path, tree, meta)
 
@@ -163,7 +168,18 @@ class PTQCheckpointer:
         if not exists(self.path):
             return None
         tree, meta = load_pytree(self.path)
-        from repro.core.reconstruct import BlockReport
+        from repro.core.reconstruct import BlockReport, site_plans
+        for i, saved in enumerate(meta.get("plans", [])):
+            if i >= len(blocks):
+                break
+            now = {n: p.summary() for n, p in
+                   site_plans(blocks[i], recipe).items()}
+            if now != saved:
+                raise ValueError(
+                    f"PTQ resume mismatch: block {i} ({blocks[i].name}) was "
+                    f"finalized under per-site plans {saved} but the current "
+                    f"recipe resolves to {now}; restart with matching rules "
+                    "or a fresh checkpoint dir")
         reports = [BlockReport(**r) for r in meta["reports"]]
         finalized = [jax.tree.map(jnp.asarray, f) for f in tree["finalized"]]
         astates = jax.tree.map(jnp.asarray, tree["astates"])

@@ -1,5 +1,16 @@
 """Paper core: FlexRound + rounding baselines + PTQ reconstruction engine."""
-from repro.core.quant_config import QuantConfig, QuantRecipe  # noqa: F401
+from repro.core.method_api import (  # noqa: F401
+    RoundingMethod,
+    available_methods,
+    get_method,
+    register_method,
+)
+from repro.core.quant_config import (  # noqa: F401
+    QuantConfig,
+    QuantRecipe,
+    SitePlan,
+    SiteRule,
+)
 from repro.core.qtensor import QTensor, dequantize_qtensor  # noqa: F401
 from repro.core.context import QuantCtx  # noqa: F401
 from repro.core.reconstruct import (  # noqa: F401
@@ -14,6 +25,7 @@ from repro.core import (  # noqa: F401
     adaround,
     flexround,
     lsq,
+    method_api,
     methods,
     observers,
     qdrop,

@@ -7,12 +7,13 @@ this as the "learnable grid but additive" contrast to FlexRound.
 """
 from __future__ import annotations
 
+import sys
 from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import observers, qtensor
+from repro.core import method_api, observers, qtensor
 from repro.core import quantizer as qz
 from repro.core.quant_config import QuantConfig
 
@@ -33,6 +34,11 @@ def _codes(w, state, qcfg, ste: bool):
     rnd = qz.ste_round if ste else jnp.round
     q = rnd((w32 + state["v"]) / state["s1"]) + state["zero"]
     return jnp.clip(q, qcfg.qmin, qcfg.qmax)
+
+
+def codes(w: jax.Array, state: Dict[str, jax.Array], qcfg: QuantConfig,
+          ste: bool = True) -> jax.Array:
+    return _codes(w, state, qcfg, ste=ste)
 
 
 def apply(w: jax.Array, state: Dict[str, jax.Array], qcfg: QuantConfig) -> jax.Array:
@@ -57,3 +63,6 @@ def project(state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
 def export(w, state, qcfg: QuantConfig, dtype=jnp.bfloat16) -> qtensor.QTensor:
     q = _codes(w, state, qcfg, ste=False)
     return qtensor.from_codes(q, state["s1"], state["zero"], qcfg, dtype=dtype)
+
+
+method_api.register_method("adaquant")(sys.modules[__name__])

@@ -12,12 +12,13 @@ At export, rounding is hardened: h(V) >= 0.5 rounds up.
 """
 from __future__ import annotations
 
+import sys
 from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import observers, qtensor
+from repro.core import method_api, observers, qtensor
 from repro.core.quant_config import QuantConfig
 
 ZETA = 1.1
@@ -45,6 +46,17 @@ def _codes(w, state, qcfg, hard: bool):
         h = (h >= 0.5).astype(jnp.float32)
     q = jnp.floor(w32 / state["s1"]) + h + state["zero"]
     return jnp.clip(q, qcfg.qmin, qcfg.qmax)
+
+
+def codes(w: jax.Array, state: Dict[str, jax.Array], qcfg: QuantConfig,
+          ste: bool = True) -> jax.Array:
+    """Hardened integer codes (h(V) >= 0.5 rounds up), matching the protocol
+    contract; ``ste`` routes gradients through the soft relaxation."""
+    hard = _codes(w, state, qcfg, hard=True)
+    if ste:
+        soft = _codes(w, state, qcfg, hard=False)
+        return soft + jax.lax.stop_gradient(hard - soft)
+    return hard
 
 
 def apply(w: jax.Array, state: Dict[str, jax.Array], qcfg: QuantConfig) -> jax.Array:
@@ -76,3 +88,6 @@ def project(state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
 def export(w, state, qcfg: QuantConfig, dtype=jnp.bfloat16) -> qtensor.QTensor:
     q = _codes(w, state, qcfg, hard=True)
     return qtensor.from_codes(q, state["s1"], state["zero"], qcfg, dtype=dtype)
+
+
+method_api.register_method("adaround")(sys.modules[__name__])

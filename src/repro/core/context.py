@@ -18,14 +18,14 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import lsq, methods, qdrop
+from repro.core import lsq, qdrop
 from repro.core.qtensor import QTensor, dequantize_qtensor
-from repro.core.quant_config import QuantConfig, QuantRecipe
+from repro.core.quant_config import QuantRecipe, SitePlan
 
 
 def site_key(key: jax.Array, name: str) -> jax.Array:
@@ -46,12 +46,11 @@ class QuantCtx:
     backend: str = "xla"
 
     # -------------------------------------------------------------- helpers
-    def _wqcfg(self, batch_dims: int) -> QuantConfig:
-        c = self.recipe.weight_qconfig()
-        return dataclasses.replace(c, batch_dims=batch_dims) if batch_dims else c
-
-    def _aqcfg(self) -> Optional[QuantConfig]:
-        return self.recipe.act_qconfig() if self.recipe else None
+    def _plan(self, name: str, batch_dims: int = 0) -> Optional[SitePlan]:
+        """Per-site plan (method + configs) from the recipe's rules."""
+        if self.recipe is None:
+            return None
+        return self.recipe.resolve(name, batch_dims=batch_dims)
 
     def _act(self, name: str, x: jax.Array) -> jax.Array:
         """Activation quantization before a linear (paper §4.3)."""
@@ -66,10 +65,10 @@ class QuantCtx:
                 lo, hi = min(lo, plo), max(hi, phi)
             self.records[name] = (lo, hi)
             return x
-        aq = self._aqcfg()
-        if aq is None or name not in self.astates:
+        plan = self._plan(name)
+        if plan is None or plan.act is None or name not in self.astates:
             return x
-        x_hat = lsq.apply(x, self.astates[name], aq)
+        x_hat = lsq.apply(x, self.astates[name], plan.act)
         if (self.mode == "recon" and self.recipe.setting == "qdrop"
                 and self.drop_enabled and self.key is not None):
             return qdrop.qdrop(x, x_hat, self.recipe.drop_prob, site_key(self.key, name))
@@ -79,8 +78,8 @@ class QuantCtx:
         if isinstance(w, QTensor):
             return dequantize_qtensor(w)
         if self.mode == "recon" and name in self.wstates:
-            method = methods.get(self.recipe.method)
-            return method.apply(w, self.wstates[name], self._wqcfg(batch_dims))
+            plan = self._plan(name, batch_dims)
+            return plan.method.apply(w, self.wstates[name], plan.weight)
         return w
 
     # ------------------------------------------------------------------ ops

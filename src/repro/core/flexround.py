@@ -20,12 +20,13 @@ Weight layout conventions (JAX):
 """
 from __future__ import annotations
 
+import sys
 from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import observers, qtensor
+from repro.core import method_api, observers, qtensor
 from repro.core import quantizer as qz
 from repro.core.quant_config import QuantConfig
 
@@ -99,3 +100,6 @@ def export(w: jax.Array, state: Dict[str, jax.Array], qcfg: QuantConfig,
            dtype=jnp.bfloat16) -> qtensor.QTensor:
     q = codes(w, state, qcfg, ste=False)
     return qtensor.from_codes(q, state["s1"], state["zero"], qcfg, dtype=dtype)
+
+
+method_api.register_method("flexround")(sys.modules[__name__])

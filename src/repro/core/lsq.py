@@ -9,11 +9,13 @@ are quantized on the fly (dynamic graph position, static learned step).
 """
 from __future__ import annotations
 
+import sys
 from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import method_api
 from repro.core import quantizer as qz
 from repro.core.quant_config import QuantConfig
 
@@ -50,3 +52,6 @@ def project(state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
     out = dict(state)
     out["step"] = jnp.maximum(out["step"], EPS)
     return out
+
+
+method_api.register_method("lsq", kind="activation")(sys.modules[__name__])

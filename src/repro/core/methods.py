@@ -1,18 +1,42 @@
-"""Registry of weight-rounding methods (paper §3 + baselines it compares to)."""
+"""DEPRECATED alias for :mod:`repro.core.method_api`.
+
+Historically this module held a hand-maintained ``REGISTRY`` dict that had to
+be kept in sync with the ``METHODS`` tuple in ``quant_config.py`` and the
+argparse choices in ``launch/quantize.py``. All three now derive from the
+single registry in ``method_api``; ``get()`` below is kept for one release so
+downstream code migrates with a warning instead of a break.
+
+    methods.get("flexround")      ->  method_api.get_method("flexround")
+    methods.REGISTRY              ->  dict over method_api.available_methods()
+
+Note both now return ``RoundingMethod`` bundles, not the raw modules: the
+seven protocol callables (``init/apply/codes/loss_extra/trainable/project/
+export``) are preserved, but module-private extras (``adaround.ZETA``,
+``flexround.divisor``, ...) are only on the modules themselves — import
+those directly.
+"""
 from __future__ import annotations
 
-from repro.core import adaquant, adaround, flexround, rtn
+import warnings
 
-REGISTRY = {
-    "rtn": rtn,
-    "adaround": adaround,
-    "adaquant": adaquant,
-    "flexround": flexround,
-}
+from repro.core import method_api
 
 
-def get(name: str):
-    try:
-        return REGISTRY[name]
-    except KeyError:
-        raise KeyError(f"unknown rounding method {name!r}; have {list(REGISTRY)}")
+def get(name: str) -> method_api.RoundingMethod:
+    """Deprecated: use ``method_api.get_method``."""
+    warnings.warn(
+        "repro.core.methods.get() is deprecated; use "
+        "repro.core.method_api.get_method()", DeprecationWarning, stacklevel=2)
+    return method_api.get_method(name)
+
+
+def __getattr__(attr: str):
+    if attr == "REGISTRY":
+        warnings.warn(
+            "repro.core.methods.REGISTRY is deprecated; use "
+            "repro.core.method_api.available_methods()/get_method()",
+            DeprecationWarning, stacklevel=2)
+        # the historical REGISTRY held weight-rounding entries only
+        return {n: method_api.get_method(n)
+                for n in method_api.available_methods()}
+    raise AttributeError(f"module {__name__!r} has no attribute {attr!r}")

@@ -1,24 +1,49 @@
-"""Quantization configuration objects.
+"""Quantization configuration: per-quantizer, per-run, and per-site.
 
-Terminology follows the FlexRound paper (ICML 2023):
-  - ``s1``: quantization grid size (scalar per-tensor, or per-channel vector).
-  - asymmetric quantization uses an integer zero point ``z``.
-  - granularity ``per_channel`` means one (s1, z) pair per *output* channel,
-    which for our JAX weight convention ``W[d_in, d_out]`` is the last axis.
+Three layers of description, smallest to largest:
+
+  ``QuantConfig``   one uniform affine quantizer (bits, symmetry, granularity,
+                    observer). Terminology follows the FlexRound paper
+                    (ICML 2023): ``s1`` is the grid size (scalar per-tensor or
+                    per-output-channel vector); asymmetric quantization adds an
+                    integer zero point ``z``; ``per_channel`` means one (s1, z)
+                    pair per *output* channel, i.e. the last axis of our JAX
+                    weight convention ``W[d_in, d_out]``.
+
+  ``QuantRecipe``   a full PTQ run (paper §4 setups): default method, weight /
+                    activation configs, optimizer budget, QDrop setting — plus
+                    an ordered tuple of ``rules`` for per-site overrides.
+
+  ``SiteRule``      one override rule: a glob pattern over site names (e.g.
+  + ``SitePlan``    ``"layers.0.*"``) and a mapping of recipe-field overrides.
+                    ``recipe.resolve(site_name, site)`` folds all matching
+                    rules (later rules win) into a ``SitePlan`` — the fully
+                    resolved method + weight config + activation config + lr
+                    for that one weight site. This is what makes
+                    mixed-precision PTQ (W4 body + W8 first/last layers, or a
+                    different rounding method per site) a first-class scenario.
 
 Paper recipes expressed with these configs:
   vision W4/W3/W2 .... QuantConfig(bits=b, symmetric=True,  granularity="per_tensor")
   LM W8A8 ............ QuantConfig(bits=8, symmetric=False, granularity="per_tensor")
   LLaMA weights ...... QuantConfig(bits=8|4|3, symmetric=False, granularity="per_channel")
+  LLM mixed W4/W8 .... QuantRecipe(w_bits=4, rules=("layers.0.*:w_bits=8",
+                                                    "layers.11.*:w_bits=8"))
+
+Method names are validated against the single registry in
+:mod:`repro.core.method_api`; there is no hard-coded method list here.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import fnmatch
+import functools
+from typing import Any, Mapping, Optional, Tuple
+
+from repro.core import method_api
 
 GRANULARITIES = ("per_tensor", "per_channel")
 OBSERVERS = ("minmax", "mse")
-METHODS = ("rtn", "adaround", "adaquant", "flexround")
 SETTINGS = ("brecq", "qdrop")  # activation handling during reconstruction
 RECON_UNITS = ("layer", "block")
 
@@ -61,6 +86,103 @@ class QuantConfig:
         return self.qmax - self.qmin + 1
 
 
+# ------------------------------------------------------------ per-site rules
+# Recipe fields a SiteRule may override.
+RULE_KEYS = ("method", "w_bits", "w_symmetric", "w_granularity", "w_observer",
+             "a_bits", "a_symmetric", "lr")
+
+_BOOL_KEYS = ("w_symmetric", "a_symmetric")
+_INT_KEYS = ("w_bits",)
+_FLOAT_KEYS = ("lr",)
+
+
+def _coerce(key: str, value: Any) -> Any:
+    """Parse a string override value to its typed form (CLI / text rules)."""
+    if not isinstance(value, str):
+        return value
+    v = value.strip()
+    if key == "a_bits":
+        return None if v.lower() in ("none", "off") else int(v)
+    if key in _INT_KEYS:
+        return int(v)
+    if key in _FLOAT_KEYS:
+        return float(v)
+    if key in _BOOL_KEYS:
+        if v.lower() in ("1", "true", "yes"):
+            return True
+        if v.lower() in ("0", "false", "no"):
+            return False
+        raise ValueError(f"rule override {key}={v!r} is not a boolean")
+    return v
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteRule:
+    """One per-site override: glob ``pattern`` over site names + overrides.
+
+    ``overrides`` is stored as a sorted tuple of (key, value) pairs so rules
+    stay hashable (resolution results are cached on the frozen recipe).
+    """
+
+    pattern: str
+    overrides: Tuple[Tuple[str, Any], ...]
+
+    def __post_init__(self):
+        bad = [k for k, _ in self.overrides if k not in RULE_KEYS]
+        if bad:
+            raise ValueError(f"rule {self.pattern!r} overrides unknown recipe "
+                             f"fields {bad}; allowed: {RULE_KEYS}")
+
+    @classmethod
+    def make(cls, pattern: str, **overrides) -> "SiteRule":
+        items = tuple(sorted((k, _coerce(k, v)) for k, v in overrides.items()))
+        return cls(pattern=pattern, overrides=items)
+
+    @classmethod
+    def parse(cls, text: str) -> "SiteRule":
+        """Parse ``"glob:key=value[,key=value...]"`` (the CLI ``--rule`` form),
+        e.g. ``"layers.0.*:w_bits=8"`` or ``"*.experts.*:method=rtn,w_bits=8"``.
+        """
+        pattern, sep, body = text.partition(":")
+        if not sep or not pattern or not body:
+            raise ValueError(f"rule {text!r} is not of the form "
+                             "'glob:key=value[,key=value...]'")
+        kv = {}
+        for part in body.split(","):
+            k, eq, v = part.partition("=")
+            if not eq:
+                raise ValueError(f"rule {text!r}: override {part!r} has no '='")
+            kv[k.strip()] = v
+        return cls.make(pattern.strip(), **kv)
+
+    def matches(self, site_name: str) -> bool:
+        return fnmatch.fnmatchcase(site_name, self.pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class SitePlan:
+    """Fully resolved quantization plan for one weight site."""
+
+    site_name: str
+    method: method_api.RoundingMethod
+    weight: QuantConfig          # batch_dims already patched for the site
+    act: Optional[QuantConfig]   # None => activations stay fp at this site
+    lr: float
+
+    def summary(self) -> dict:
+        """JSON-able description (checkpoint metadata, logs). Covers every
+        rule-overridable field so the resume-mismatch guard catches any
+        changed override, not just method/bits."""
+        return {"method": self.method.name, "w_bits": self.weight.bits,
+                "w_symmetric": self.weight.symmetric,
+                "w_granularity": self.weight.granularity,
+                "w_observer": self.weight.observer,
+                "a_bits": self.act.bits if self.act is not None else None,
+                "a_symmetric": (self.act.symmetric
+                                if self.act is not None else None),
+                "lr": self.lr}
+
+
 @dataclasses.dataclass(frozen=True)
 class QuantRecipe:
     """A full PTQ run description (paper section 4 experimental setups)."""
@@ -93,15 +215,53 @@ class QuantRecipe:
     # gradient compression for cross-pod all-reduce during reconstruction
     grad_compress: bool = False
 
+    # Ordered per-site overrides; later matches win. Entries may be SiteRule
+    # objects or "glob:key=value[,...]" strings (parsed on construction).
+    rules: Tuple[SiteRule, ...] = ()
+
     def __post_init__(self):
-        if self.method not in METHODS:
-            raise ValueError(f"method {self.method!r} not in {METHODS}")
+        if self.method not in method_api.available_methods():
+            raise ValueError(f"method {self.method!r} not registered; "
+                             f"have {method_api.available_methods()}")
         if self.setting not in SETTINGS:
             raise ValueError(f"setting {self.setting!r} not in {SETTINGS}")
         if self.recon not in RECON_UNITS:
             raise ValueError(f"recon {self.recon!r} not in {RECON_UNITS}")
+        rules = tuple(SiteRule.parse(r) if isinstance(r, str) else r
+                      for r in self.rules)
+        for r in rules:
+            m = dict(r.overrides).get("method")
+            if m is not None and m not in method_api.available_methods():
+                raise ValueError(f"rule {r.pattern!r}: method {m!r} not "
+                                 f"registered; have "
+                                 f"{method_api.available_methods()}")
+        object.__setattr__(self, "rules", rules)
 
+    # ------------------------------------------------------- site resolution
+    def resolve(self, site_name: str, site: Any = None, *,
+                batch_dims: int = 0) -> SitePlan:
+        """Fold all matching rules (last match wins) into a SitePlan.
+
+        ``site`` may be anything with a ``batch_dims`` attribute (a
+        ``reconstruct.Site``); callers that only know the batch_dims int
+        (QuantCtx) pass it directly.
+        """
+        if site is not None:
+            batch_dims = getattr(site, "batch_dims", batch_dims)
+        return _resolve_cached(self, site_name, batch_dims)
+
+    def overrides_for(self, site_name: str) -> Mapping[str, Any]:
+        out: dict = {}
+        for rule in self.rules:
+            if rule.matches(site_name):
+                out.update(rule.overrides)
+        return out
+
+    # -------------------------------------------- recipe-default quantizers
     def weight_qconfig(self) -> QuantConfig:
+        """Recipe-default weight quantizer (no per-site rules applied).
+        Prefer ``resolve(site_name).weight`` at call sites that know the
+        site."""
         return QuantConfig(
             bits=self.w_bits,
             symmetric=self.w_symmetric,
@@ -110,6 +270,7 @@ class QuantRecipe:
         )
 
     def act_qconfig(self) -> Optional[QuantConfig]:
+        """Recipe-default activation quantizer (see ``weight_qconfig``)."""
         if self.a_bits is None:
             return None
         return QuantConfig(
@@ -118,3 +279,30 @@ class QuantRecipe:
             granularity="per_tensor",
             observer="minmax",
         )
+
+
+@functools.lru_cache(maxsize=8192)
+def _resolve_cached(recipe: QuantRecipe, site_name: str,
+                    batch_dims: int) -> SitePlan:
+    o = dict(recipe.overrides_for(site_name))
+    weight = QuantConfig(
+        bits=o.get("w_bits", recipe.w_bits),
+        symmetric=o.get("w_symmetric", recipe.w_symmetric),
+        granularity=o.get("w_granularity", recipe.w_granularity),
+        observer=o.get("w_observer", recipe.w_observer),
+        batch_dims=batch_dims,
+    )
+    a_bits = o.get("a_bits", recipe.a_bits)
+    act = None if a_bits is None else QuantConfig(
+        bits=a_bits,
+        symmetric=o.get("a_symmetric", recipe.a_symmetric),
+        granularity="per_tensor",
+        observer="minmax",
+    )
+    return SitePlan(
+        site_name=site_name,
+        method=method_api.get_method(o.get("method", recipe.method)),
+        weight=weight,
+        act=act,
+        lr=o.get("lr", recipe.lr),
+    )

@@ -27,10 +27,10 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import lsq, methods
+from repro.core import lsq
 from repro.core import paths as pth
 from repro.core.context import QuantCtx
-from repro.core.quant_config import QuantRecipe
+from repro.core.quant_config import QuantRecipe, SitePlan
 from repro.optim.adam import AdamConfig, adam_init, adam_update
 
 
@@ -60,39 +60,45 @@ class BlockReport:
     seconds: float
 
 
-def _qcfg_for(recipe: QuantRecipe, site: Site):
-    import dataclasses as dc
-    c = recipe.weight_qconfig()
-    return dc.replace(c, batch_dims=site.batch_dims) if site.batch_dims else c
+def site_plans(block: BlockHandle, recipe: QuantRecipe) -> Dict[str, SitePlan]:
+    """Resolve the recipe's rules once per block: site name -> SitePlan."""
+    return {name: recipe.resolve(name, site)
+            for name, site in block.sites.items()}
 
 
 def init_wstates(block: BlockHandle, recipe: QuantRecipe) -> Dict[str, Any]:
-    method = methods.get(recipe.method)
     out = {}
     for name, site in block.sites.items():
+        plan = recipe.resolve(name, site)
         w = pth.get_path(block.params, site.path)
-        out[name] = method.init(w, _qcfg_for(recipe, site))
+        out[name] = plan.method.init(w, plan.weight)
     return out
 
 
 def init_astates(block: BlockHandle, recipe: QuantRecipe, x_q: jax.Array,
                  prev: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-    """LSQ init from observed ranges on the student stream (eager pass)."""
-    aq = recipe.act_qconfig()
-    if aq is None:
-        return {}
+    """LSQ init from observed ranges on the student stream (eager pass).
+
+    Per-site rules apply here too: a site whose plan has ``act is None``
+    (weight-only override) gets no LSQ state and stays fp.
+    """
+    if recipe.a_bits is None and not any(
+            "a_bits" in dict(r.overrides) for r in recipe.rules):
+        return dict(prev or {})
     ctx = QuantCtx(mode="calib", recipe=recipe)
     block.apply(block.params, x_q, ctx)
     states = dict(prev or {})
     for name, (lo, hi) in ctx.records.items():
+        aq = recipe.resolve(name).act
+        if aq is None:
+            continue
         sample = jnp.asarray([lo, hi], jnp.float32)
         states[name] = lsq.init(sample, aq)
     return states
 
 
-def _trainable_mask(wstates, astates, recipe: QuantRecipe):
-    method = methods.get(recipe.method)
-    wmask = {k: method.trainable(v) for k, v in wstates.items()}
+def _trainable_mask(wstates, astates, plans: Dict[str, SitePlan]):
+    wmask = {k: plans[k].method.trainable(v) for k, v in wstates.items()}
     amask = {k: lsq.trainable(v) for k, v in astates.items()}
     return wmask, amask
 
@@ -101,10 +107,25 @@ def _apply_mask(grads, mask):
     return jax.tree.map(lambda g, m: g if m else jnp.zeros_like(g), grads, mask)
 
 
+def _w_opt_cfgs(plans: Dict[str, SitePlan]) -> Dict[str, AdamConfig]:
+    """One AdamConfig per site so rule-overridden learning rates apply."""
+    return {name: AdamConfig(lr=plan.lr) for name, plan in plans.items()}
+
+
+def init_wopt(wstates: Dict[str, Any],
+              w_opt_cfgs: Dict[str, AdamConfig]) -> Dict[str, Any]:
+    return {k: adam_init(v, w_opt_cfgs[k]) for k, v in wstates.items()}
+
+
 def make_recon_step(block: BlockHandle, recipe: QuantRecipe,
-                    w_opt_cfg: AdamConfig, a_opt_cfg: AdamConfig):
-    """Builds the jitted (wstates, astates, opts, batch, step, key) -> ... fn."""
-    method = methods.get(recipe.method)
+                    plans: Dict[str, SitePlan],
+                    w_opt_cfgs: Dict[str, AdamConfig], a_opt_cfg: AdamConfig):
+    """Builds the jitted (wstates, astates, opts, batch, step, key) -> ... fn.
+
+    Sites may carry heterogeneous plans (method, bits, lr): each site's
+    rounding state is updated by its own method + Adam config, all inside one
+    jitted step.
+    """
 
     def loss_fn(wstates, astates, x_q, y_fp, step, key):
         ctx = QuantCtx(mode="recon", recipe=recipe, wstates=wstates,
@@ -113,18 +134,22 @@ def make_recon_step(block: BlockHandle, recipe: QuantRecipe,
         mse = jnp.mean(jnp.square(y.astype(jnp.float32) - y_fp.astype(jnp.float32)))
         reg = jnp.float32(0.0)
         for name, st in wstates.items():
-            reg = reg + method.loss_extra(st, _qcfg_for(recipe, block.sites[name]),
-                                          step, recipe)
+            plan = plans[name]
+            reg = reg + plan.method.loss_extra(st, plan.weight, step, recipe)
         return mse + reg, mse
 
     def step_fn(wstates, astates, wopt, aopt, x_q, y_fp, step, key):
         (loss, mse), (gw, ga) = jax.value_and_grad(loss_fn, argnums=(0, 1),
                                                    has_aux=True)(
             wstates, astates, x_q, y_fp, step, key)
-        wmask, amask = _trainable_mask(wstates, astates, recipe)
+        wmask, amask = _trainable_mask(wstates, astates, plans)
         gw = _apply_mask(gw, wmask)
-        wstates, wopt, _ = adam_update(gw, wopt, wstates, w_opt_cfg)
-        wstates = {k: method.project(v) for k, v in wstates.items()}
+        new_w, new_wopt = {}, {}
+        for k in wstates:
+            st, op, _ = adam_update(gw[k], wopt[k], wstates[k], w_opt_cfgs[k])
+            new_w[k] = plans[k].method.project(st)
+            new_wopt[k] = op
+        wstates, wopt = new_w, new_wopt
         if astates:
             ga = _apply_mask(ga, amask)
             astates, aopt, _ = adam_update(ga, aopt, astates, a_opt_cfg)
@@ -151,15 +176,16 @@ def reconstruct_block(block: BlockHandle, recipe: QuantRecipe, x_q: jax.Array,
                       ) -> Tuple[Dict[str, Any], Dict[str, Any], BlockReport]:
     """Optimize rounding (+LSQ) states for one block. Returns final states."""
     t0 = time.time()
+    plans = site_plans(block, recipe)
     wstates = init_wstates(block, recipe)
     astates = astates if astates is not None else init_astates(block, recipe, x_q)
     err0 = recon_error(block, recipe, wstates, astates, x_q, y_fp)
 
-    w_opt_cfg = AdamConfig(lr=recipe.lr)
+    w_opt_cfgs = _w_opt_cfgs(plans)
     a_opt_cfg = AdamConfig(lr=recipe.lr_lsq)
-    wopt = adam_init(wstates, w_opt_cfg)
+    wopt = init_wopt(wstates, w_opt_cfgs)
     aopt = adam_init(astates, a_opt_cfg)
-    step_fn = make_recon_step(block, recipe, w_opt_cfg, a_opt_cfg)
+    step_fn = make_recon_step(block, recipe, plans, w_opt_cfgs, a_opt_cfg)
 
     n = x_q.shape[0]
     bs = min(recipe.batch_size, n)
@@ -183,13 +209,16 @@ def reconstruct_block(block: BlockHandle, recipe: QuantRecipe, x_q: jax.Array,
 
 def finalize_block(block: BlockHandle, recipe: QuantRecipe, wstates,
                    as_qtensor: bool = True) -> Any:
-    """Replace quantized leaves with QTensor (deploy) or dequant arrays."""
+    """Replace quantized leaves with QTensor (deploy) or dequant arrays.
+
+    Each site exports with its own plan, so one block may hold QTensors of
+    different bit-widths (mixed-precision recipes)."""
     from repro.core.qtensor import dequantize_qtensor
-    method = methods.get(recipe.method)
     params = block.params
     for name, site in block.sites.items():
+        plan = recipe.resolve(name, site)
         w = pth.get_path(params, site.path)
-        qt = method.export(w, wstates[name], _qcfg_for(recipe, site), dtype=w.dtype)
+        qt = plan.method.export(w, wstates[name], plan.weight, dtype=w.dtype)
         params = pth.set_path(params, site.path, qt if as_qtensor else
                               dequantize_qtensor(qt))
     return params
@@ -308,6 +337,10 @@ def quantize_blocks(blocks: List[BlockHandle], recipe: QuantRecipe,
             progress(f"[{i + 1}/{len(blocks)}] {block.name} "
                      f"err {reports[-1].err_before:.3e} -> {reports[-1].err_after:.3e}")
         if ckpt is not None:
-            ckpt.save(i + 1, finalized, astates, reports, x_fp, x_q)
+            plan_meta = [{n: p.summary()
+                          for n, p in site_plans(b, recipe).items()}
+                         for b in blocks[:i + 1]]
+            ckpt.save(i + 1, finalized, astates, reports, x_fp, x_q,
+                      plans=plan_meta)
 
     return finalized, astates, reports

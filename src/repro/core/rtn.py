@@ -6,12 +6,13 @@ with s1/z from the observer. Nothing is learnable.
 """
 from __future__ import annotations
 
+import sys
 from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import observers, qtensor
+from repro.core import method_api, observers, qtensor
 from repro.core import quantizer as qz
 from repro.core.quant_config import QuantConfig
 
@@ -19,6 +20,11 @@ from repro.core.quant_config import QuantConfig
 def init(w: jax.Array, qcfg: QuantConfig, key=None) -> Dict[str, jax.Array]:
     scale, zero = observers.init_scale(w, qcfg)
     return {"s1": scale.astype(jnp.float32), "zero": zero.astype(jnp.float32)}
+
+
+def codes(w: jax.Array, state: Dict[str, jax.Array], qcfg: QuantConfig,
+          ste: bool = True) -> jax.Array:
+    return qz.quantize(w, state["s1"], state["zero"], qcfg, ste=ste)
 
 
 def apply(w: jax.Array, state: Dict[str, jax.Array], qcfg: QuantConfig) -> jax.Array:
@@ -40,3 +46,6 @@ def project(state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
 def export(w, state, qcfg: QuantConfig, dtype=jnp.bfloat16) -> qtensor.QTensor:
     q = qz.quantize(w, state["s1"], state["zero"], qcfg, ste=False)
     return qtensor.from_codes(q, state["s1"], state["zero"], qcfg, dtype=dtype)
+
+
+method_api.register_method("rtn")(sys.modules[__name__])

@@ -1,11 +1,20 @@
 """Production PTQ launcher: load a trained checkpoint, run block-wise
-FlexRound (or a baseline), export integer weights.
+FlexRound (or any registered method), export integer weights.
 
     PYTHONPATH=src python -m repro.launch.quantize --arch smollm-135m \
         --smoke --method flexround --w-bits 8 --a-bits 8
 
+Mixed precision via per-site rules (glob over site names, last match wins):
+
+    ... --w-bits 4 --rule 'layers.0.*:w_bits=8' --rule 'layers.11.*:w_bits=8'
+
+gives the standard LLM recipe (W4 body, W8 first/last layers); rules may also
+override method, granularity, lr, or a_bits per site (``a_bits=none`` keeps a
+site's activations fp).
+
 Fault tolerance: per-block PTQ checkpoints (--resume-dir) — a preempted run
-resumes at the first unfinished block with identical RNG.
+resumes at the first unfinished block with identical RNG; resuming under
+different rules fails loudly (per-site plans are recorded in the checkpoint).
 """
 from __future__ import annotations
 
@@ -15,8 +24,8 @@ import jax
 
 from repro.checkpoint import CheckpointManager, save_pytree
 from repro.configs import get_config, get_smoke_config
-from repro.core import QuantRecipe
-from repro.core.reconstruct import quantize_blocks
+from repro.core import QuantRecipe, method_api
+from repro.core.reconstruct import quantize_blocks, site_plans
 from repro.data import CalibrationSet, SyntheticTokens
 from repro.models import build_model
 
@@ -26,12 +35,16 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--method", default="flexround",
-                    choices=["rtn", "adaround", "adaquant", "flexround"])
+                    choices=list(method_api.available_methods()))
     ap.add_argument("--setting", default="qdrop", choices=["brecq", "qdrop"])
     ap.add_argument("--recon", default="block", choices=["block", "layer"])
     ap.add_argument("--w-bits", type=int, default=8)
     ap.add_argument("--a-bits", type=int, default=None)
     ap.add_argument("--w-granularity", default="per_channel")
+    ap.add_argument("--rule", action="append", default=[],
+                    metavar="GLOB:K=V[,K=V...]",
+                    help="per-site override, e.g. 'layers.0.*:w_bits=8'; "
+                         "repeatable, later rules win")
     ap.add_argument("--calib", type=int, default=64)
     ap.add_argument("--iters", type=int, default=200)
     ap.add_argument("--lr", type=float, default=3e-3)
@@ -56,10 +69,18 @@ def main():
                          recon=args.recon, w_bits=args.w_bits,
                          w_granularity=args.w_granularity,
                          a_bits=args.a_bits, iters=args.iters, lr=args.lr,
-                         batch_size=min(16, args.calib))
+                         batch_size=min(16, args.calib),
+                         rules=tuple(args.rule))
     src = SyntheticTokens(vocab=cfg.vocab, seq_len=args.seq, seed=0)
     cal = CalibrationSet.build(src, args.calib)
     x0, blocks, assemble = model.quant_blocks(params, cal.tokens)
+    if recipe.rules:
+        overridden = [(n, p.summary()) for b in blocks
+                      for n, p in site_plans(b, recipe).items()
+                      if recipe.overrides_for(n)]
+        print(f"rules override {len(overridden)} site(s):")
+        for n, s in overridden:
+            print(f"  {n}: {s}")
     finalized, astates, reports = quantize_blocks(
         blocks, recipe, x0, checkpoint_dir=args.resume_dir,
         progress=lambda s: print(s, flush=True))
@@ -68,7 +89,11 @@ def main():
     out = args.out or f"/tmp/quantized_{cfg.name}_{args.method}"
     save_pytree(out, {"params": qparams, "astates": astates},
                 {"arch": cfg.name, "method": args.method,
-                 "w_bits": args.w_bits, "a_bits": args.a_bits})
+                 "w_bits": args.w_bits, "a_bits": args.a_bits,
+                 # canonical --rule form so the metadata round-trips
+                 "rules": [r.pattern + ":" + ",".join(
+                     f"{k}={v}" for k, v in r.overrides)
+                     for r in recipe.rules]})
     tot0 = sum(r.err_before for r in reports)
     tot1 = sum(r.err_after for r in reports)
     print(f"quantized {len(blocks)} blocks: recon err {tot0:.3e} -> "

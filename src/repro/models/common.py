@@ -10,6 +10,45 @@ import jax.numpy as jnp
 from repro.core.context import QuantCtx
 
 
+# ------------------------------------------------------- layer stacks / scan
+def stack_layers(layers):
+    """Restack per-layer param trees into (L, ...) arrays for ``lax.scan``.
+
+    Mixed-precision PTQ can finalize different layers to structurally
+    different trees (QTensor carries static bits/packing in its treedef) or
+    to same-treedef trees with different leaf shapes (e.g. a per-channel
+    granularity rule on one layer), so when the layers are heterogeneous in
+    either way this falls back to a plain list — consumed by the
+    eager-unroll path of ``scan_layers``.
+    """
+    same_tree = len({jax.tree.structure(l) for l in layers}) == 1
+    if same_tree and len({tuple(jnp.shape(x) for x in jax.tree.leaves(l))
+                          for l in layers}) == 1:
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return list(layers)
+
+
+def scan_layers(body, carry, layers, *aux):
+    """``lax.scan`` body over per-layer params, with a mixed-precision path.
+
+    ``body(carry, p_l) -> (carry, out)`` — or ``body(carry, (p_l, *aux_l))``
+    when ``aux`` (stacked (L, ...) arrays sliced per layer) is given. When
+    ``layers`` is a stacked pytree this is exactly ``lax.scan``; when it is a
+    list of heterogeneous per-layer trees the loop unrolls eagerly (bigger
+    HLO, same math).
+    """
+    if isinstance(layers, (list, tuple)):
+        outs = []
+        for i, p_l in enumerate(layers):
+            aux_l = tuple(jax.tree.map(lambda a: a[i], a_) for a_ in aux)
+            carry, out = body(carry, (p_l, *aux_l) if aux else p_l)
+            outs.append(out)
+        if not outs or all(o is None for o in outs):
+            return carry, None
+        return carry, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return jax.lax.scan(body, carry, (layers, *aux) if aux else layers)
+
+
 # ------------------------------------------------------------------- norms
 def rmsnorm(x: jax.Array, scale: Optional[jax.Array], eps: float = 1e-6) -> jax.Array:
     x32 = x.astype(jnp.float32)

@@ -168,7 +168,7 @@ class EncDecLM:
         if cfg.remat and not collect:
             body = jax.checkpoint(body,
                                   policy=jax.checkpoint_policies.nothing_saveable)
-        x, kvs = jax.lax.scan(body, x, params["dec_layers"])
+        x, kvs = common.scan_layers(body, x, params["dec_layers"])
         return common.apply_norm("layernorm", x, params["dec_norm"]), kvs
 
     def loss(self, params, batch, ctx):
@@ -236,8 +236,8 @@ class EncDecLM:
             return (h, cache), None
 
         n = cfg.n_layers
-        (x, cache), _ = jax.lax.scan(body, (x, cache),
-                                     (params["dec_layers"], jnp.arange(n)))
+        (x, cache), _ = common.scan_layers(body, (x, cache),
+                                           params["dec_layers"], jnp.arange(n))
         x = common.apply_norm("layernorm", x, params["dec_norm"])
         logits = x @ params["lm_head"].astype(x.dtype)
         return logits, cache
@@ -256,7 +256,7 @@ class EncDecLM:
         blocks = []
         for i in range(cfg.n_layers):
             p_l = jax.tree.map(lambda a: a[i], params["dec_layers"])
-            name = f"dec{i}"
+            name = f"layers.{i}"  # canonical "layers.<i>.<site>" naming
             sites = {}
             for n in a_names:
                 sites[f"{name}.attn.{n}"] = Site(("attn", n))
@@ -271,8 +271,7 @@ class EncDecLM:
 
         def assemble(finalized):
             out = dict(params)
-            out["dec_layers"] = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                             *finalized)
+            out["dec_layers"] = common.stack_layers(finalized)
             return out
 
         return x0, blocks, assemble

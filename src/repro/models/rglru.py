@@ -235,7 +235,7 @@ class GriffinLM:
 
     def _layer(self, i, p, x, ctx, sin, cos, collect=False):
         cfg = self.cfg
-        name = f"layer{i}"
+        name = f"layers.{i}"  # canonical "layers.<i>.<site>" naming
         if self.kinds[i] == "R":
             if collect:
                 x, st = recurrent_block(p["mix"], x, cfg, ctx, name,
@@ -331,7 +331,7 @@ class GriffinLM:
         sin, cos = common.rope_sin_cos(pos_arr, cfg.head_dim, cfg.rope_theta)
         new_layers = []
         for i, (p, c) in enumerate(zip(params["layers"], cache["layers"])):
-            name = f"layer{i}"
+            name = f"layers.{i}"
             if self.kinds[i] == "R":
                 x, h_new, conv_new = recurrent_block_step(
                     p["mix"], x, cfg, ctx, name, c["h"], c["conv"])
@@ -356,7 +356,7 @@ class GriffinLM:
             ["w_gate"] if cfg.act in ("swiglu", "geglu") else [])
         blocks = []
         for i, p_l in enumerate(params["layers"]):
-            name = f"layer{i}"
+            name = f"layers.{i}"
             sites = {f"{name}.mlp.{n}": Site(("ffn", "mlp", n))
                      for n in mlp_names}
             if self.kinds[i] == "R":

@@ -209,7 +209,7 @@ class MambaLM:
         if cfg.remat:
             body = jax.checkpoint(body,
                                   policy=jax.checkpoint_policies.nothing_saveable)
-        x, _ = jax.lax.scan(body, x, params["layers"])
+        x, _ = common.scan_layers(body, x, params["layers"])
         return common.apply_norm("rmsnorm", x, params["final_norm"])
 
     def loss(self, params, batch, ctx):
@@ -238,7 +238,7 @@ class MambaLM:
             y, (conv_tail, state) = layer_forward(p_l, h, cfg, ctx, "layers")
             return y, (conv_tail, state)
 
-        x, (convs, states) = jax.lax.scan(body, x, params["layers"])
+        x, (convs, states) = common.scan_layers(body, x, params["layers"])
         cache = {"conv": convs.astype(cache["conv"].dtype),
                  "ssm": states.astype(cache["ssm"].dtype)}
         x = common.apply_norm("rmsnorm", x, params["final_norm"])
@@ -255,8 +255,8 @@ class MambaLM:
                                             conv_l, ssm_l)
             return y, (conv_n, ssm_n)
 
-        x, (convs, ssms) = jax.lax.scan(
-            body, x, (params["layers"], cache["conv"], cache["ssm"]))
+        x, (convs, ssms) = common.scan_layers(
+            body, x, params["layers"], cache["conv"], cache["ssm"])
         cache = {"conv": convs, "ssm": ssms}
         x = common.apply_norm("rmsnorm", x, params["final_norm"])
         logits = x @ params["lm_head"].astype(x.dtype)
@@ -270,7 +270,7 @@ class MambaLM:
                  "layers.out_proj": Site(("out_proj",))}
         for i in range(cfg.n_layers):
             p_l = jax.tree.map(lambda a: a[i], params["layers"])
-            bname = f"layer{i}"
+            bname = f"layers.{i}"  # canonical "layers.<i>.<site>" naming
             bsites = {k.replace("layers", bname, 1): v for k, v in sites.items()}
 
             def apply_fn(p, x, ctx, _bn=bname):
@@ -281,7 +281,7 @@ class MambaLM:
 
         def assemble(finalized):
             out = dict(params)
-            out["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *finalized)
+            out["layers"] = common.stack_layers(finalized)
             return out
 
         return x0, blocks, assemble

@@ -162,7 +162,7 @@ class TransformerLM:
         if cfg.remat:
             body = jax.checkpoint(body,
                                   policy=jax.checkpoint_policies.nothing_saveable)
-        (x, aux), kvs = jax.lax.scan(body, (x, jnp.float32(0.0)), stacked)
+        (x, aux), kvs = common.scan_layers(body, (x, jnp.float32(0.0)), stacked)
         return x, aux, kvs
 
     # ----------------------------------------------------------- forward
@@ -406,8 +406,8 @@ class TransformerLM:
             h = h + m_out * cfg.resid_mult
             return (h, cache), None
 
-        (x, cache), _ = jax.lax.scan(body, (x, cache),
-                                     (stack, jnp.arange(n)))
+        (x, cache), _ = common.scan_layers(body, (x, cache), stack,
+                                           jnp.arange(n))
         return x, cache
 
     # --------------------------------------------------------- PTQ plan
@@ -442,12 +442,16 @@ class TransformerLM:
             cfg.rope_theta)
         blocks = []
         segs = self._all_layers(params)
+        gi = 0  # global layer index across segments -> stable site names
         for seg_i, (stack, kind, n) in enumerate(segs):
             for i in range(n):
                 p_l = jax.tree.map(lambda a: a[i], stack)
-                bname = f"seg{seg_i}.layer{i}"
-                # per-layer unique site names so LSQ activation steps are
-                # learned per layer (paper's setup), not shared across layers
+                # canonical site naming "layers.<i>.<site>" (shared across
+                # model families) so recipe rules like "layers.0.*" are
+                # portable; per-layer unique names also keep LSQ activation
+                # steps learned per layer (paper's setup), not shared
+                bname = f"layers.{gi}"
+                gi += 1
                 raw_sites = self._layer_sites(kind)
                 sites = {k.replace("layers", bname, 1): v
                          for k, v in raw_sites.items()}
@@ -465,10 +469,10 @@ class TransformerLM:
             for seg_i, (stack, kind, n) in enumerate(segs):
                 layers = finalized[idx:idx + n]
                 idx += n
-                restacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
                 key = ("dense_layers" if (seg_i == 0 and len(segs) > 1)
                        else "layers")
-                out[key] = restacked
+                # mixed-precision layers restack to a list (eager unroll)
+                out[key] = common.stack_layers(layers)
             return out
 
         return x0, blocks, assemble

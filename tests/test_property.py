@@ -1,10 +1,13 @@
 """Hypothesis property-based tests on quantization invariants."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
-import jax
-import jax.numpy as jnp
-import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (installed in CI)")
+import hypothesis.extra.numpy as hnp  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
 
 from repro.core import flexround, observers, rtn
 from repro.core import quantizer as qz

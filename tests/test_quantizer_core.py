@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import adaquant, adaround, flexround, methods, observers, rtn
+from repro.core import adaquant, adaround, flexround, method_api, observers, rtn
 from repro.core import quantizer as qz
 from repro.core.qtensor import dequantize_qtensor
 from repro.core.quant_config import QuantConfig
@@ -147,7 +147,7 @@ def test_flexround_can_shift_more_than_one_grid():
 @pytest.mark.parametrize("sym,gran", [(True, "per_tensor"), (False, "per_channel")])
 def test_method_roundtrip_and_export(name, sym, gran):
     qcfg = QuantConfig(bits=4, symmetric=sym, granularity=gran)
-    m = methods.get(name)
+    m = method_api.get_method(name)
     w = _w((16, 8))
     st = m.init(w, qcfg)
     what = m.apply(w, st, qcfg)
