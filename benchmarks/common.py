@@ -91,6 +91,24 @@ def ptq(model, params, recipe: QuantRecipe, n_calib: int = 64,
     return assemble(finalized), astates, reports
 
 
+def timed_decode(model, params, ctx: QuantCtx, tokens, *, reps: int = 8
+                 ) -> float:
+    """Shared decode-timing protocol: jit prefill, one warm decode step,
+    then ``reps`` timed steps. Returns us per decode step."""
+    B, S = tokens.shape
+    cache = model.init_cache(B, S + reps + 1)
+    prefill = jax.jit(lambda p, t, c: model.prefill(p, t, c, ctx))
+    _, cache = prefill(params, tokens, cache)
+    step = jax.jit(lambda p, t, c, pos: model.decode_step(p, t, c, pos, ctx))
+    tok = tokens[:, -1:]
+    logits, cache = step(params, tok, cache, jnp.int32(S))  # warm
+    t0 = time.perf_counter()
+    for i in range(reps):
+        logits, cache = step(params, tok, cache, jnp.int32(S + 1 + i))
+    jax.block_until_ready(logits)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
 def timed(fn, *args, reps: int = 3) -> Tuple[float, object]:
     out = fn(*args)
     jax.block_until_ready(out)

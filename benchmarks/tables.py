@@ -194,20 +194,8 @@ def bench_serving(out: List[str]):
                                 common.BENCH_CFG.vocab)
 
     def run(params_v, tag):
-        ctx = QuantCtx(mode="deploy")
-        cache = model.init_cache(B, S + 8)
-        prefill = jax.jit(lambda p, t, c: model.prefill(p, t, c, ctx))
-        _, cache = prefill(params_v, tokens, cache)
-        step = jax.jit(lambda p, t, c, pos: model.decode_step(p, t, c, pos,
-                                                              ctx))
-        tok = tokens[:, -1:]
-        logits, cache = step(params_v, tok, cache, jnp.int32(S))  # warm
-        t0 = time.perf_counter()
-        reps = 8
-        for i in range(reps):
-            logits, cache = step(params_v, tok, cache, jnp.int32(S + 1 + i))
-        jax.block_until_ready(logits)
-        us = (time.perf_counter() - t0) / reps * 1e6
+        us = common.timed_decode(model, params_v, QuantCtx(mode="deploy"),
+                                 tokens, reps=8)
         out.append(common.row(f"serving/decode/{tag}", us,
                               f"tok_per_s={B / (us * 1e-6):.0f}"))
 
@@ -220,6 +208,42 @@ def bench_serving(out: List[str]):
         run(qparams, tag)
 
 
+def bench_decode(out: List[str]):
+    """Decode serving benchmark (kernel-backed deploy path): us_per_call and
+    effective weight-bytes-moved per decode step for fp16 vs W8 vs W4.
+
+    Every QTensor matmul dispatches through ``kernels/ops.qtensor_matmul``
+    under ``backend="auto"`` (compiled Pallas on TPU; XLA ref path on the CI
+    CPU, where the win shows as bytes while the TPU trajectory comes from the
+    roofline). RTN export keeps the benchmark fast — it measures serving
+    throughput, not reconstruction quality.
+    """
+    from repro.core.qtensor import tree_weight_bytes
+
+    model, params = common.get_trained_lm()
+    B, S, reps = 8, 64, 16
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0,
+                                common.BENCH_CFG.vocab)
+
+    def run(params_v, tag):
+        us = common.timed_decode(
+            model, params_v, QuantCtx(mode="deploy", backend="auto"),
+            tokens, reps=reps)
+        wbytes = tree_weight_bytes(params_v)
+        out.append(common.row(
+            f"decode/{tag}", us,
+            f"weight_MiB_per_step={wbytes / 2**20:.3f};"
+            f"tok_per_s={B / (us * 1e-6):.0f}"))
+
+    run(params, "fp16")
+    for bits, tag in ((8, "w8"), (4, "w4")):
+        recipe = QuantRecipe(method="rtn", w_bits=bits, a_bits=None,
+                             w_granularity="per_channel", iters=1,
+                             batch_size=16)
+        qparams, _, _ = common.ptq(model, params, recipe, as_qtensor=True)
+        run(qparams, tag)
+
+
 ALL_TABLES = [table1_ablation, table2_weights_only, table3_w_a,
               table5_lm_w8a8, table7_llm_blockwise, fig3_grid_shifts,
-              bench_kernels, bench_serving]
+              bench_kernels, bench_serving, bench_decode]

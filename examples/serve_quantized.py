@@ -27,11 +27,12 @@ from repro.core.context import QuantCtx
 class ServingEngine:
     """Minimal batched engine: pad-batch prefill, lockstep decode."""
 
-    def __init__(self, model, params, max_len=128):
+    def __init__(self, model, params, max_len=128, backend="auto"):
         self.model = model
         self.params = params
         self.max_len = max_len
-        ctx = QuantCtx(mode="deploy")
+        # kernel-backed deploy path: compiled Pallas on TPU, XLA refs on CPU
+        ctx = QuantCtx(mode="deploy", backend=backend)
         self._prefill = jax.jit(
             lambda p, t, c: model.prefill(p, t, c, ctx))
         self._step = jax.jit(
@@ -58,6 +59,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "pallas", "xla"])
     args = ap.parse_args()
 
     model, params = common.get_trained_lm()
@@ -76,7 +79,7 @@ def main():
 
     ref = None
     for tag, p in variants.items():
-        eng = ServingEngine(model, p)
+        eng = ServingEngine(model, p, backend=args.backend)
         out = eng.generate(prompts, 4)  # warm compile
         t0 = time.perf_counter()
         out = eng.generate(prompts, args.tokens)

@@ -6,10 +6,26 @@ Every linear/conv in the model zoo routes through ``ctx.linear`` /
   fp       plain full-precision math (pretraining, teacher stream)
   recon    weights fake-quantized via learnable rounding states, activations
            LSQ-fake-quantized (+QDrop random dropping)  -> PTQ reconstruction
-  deploy   weights are QTensor leaves (int codes); dequant-matmul (optionally
-           via Pallas kernels); activations statically quantized (no drop)
+  deploy   weights are QTensor leaves (int codes); every QTensor matmul
+           dispatches through ``kernels/ops.qtensor_matmul`` under the
+           ``backend`` policy below; activations statically quantized
+           (no drop), and W8A8 sites feed the integer kernel directly
   calib    eager-only: record activation ranges per site (LSQ init)
   capture  eager-only: record per-site inputs (layer-wise reconstruction)
+
+Deploy backend policy (see ``kernels.ops.resolve_backend``):
+
+  auto     compiled Pallas kernels on TPU; XLA ref path elsewhere (default)
+  pallas   Pallas kernels — compiled on TPU, interpreted off-TPU (parity
+           testing); ``interpret`` can be forced explicitly
+  xla      pure-jnp ref implementations (always compile, any backend)
+
+Which QTensor shapes hit which kernel: 4-bit K-packed (d_in, d_out) weights
+-> W4A16 dequant-matmul; 8-bit weights with static LSQ activation states ->
+W8A8 integer matmul (activation codes computed from the LSQ step/offset);
+8-bit weight-only -> W8A16 dequant-matmul; stacked expert weights
+(E, d_in, d_out) with batch_dims=1 -> grid-extended per-expert
+dequant-matmul. Conv QTensors still dequantize (no conv kernel yet).
 
 Site names are stable strings ("layers.3.attn.wq"); QDrop RNG is derived per
 site by folding a crc32 of the name into the step key.
@@ -42,8 +58,11 @@ class QuantCtx:
     drop_enabled: bool = True
     # eager-only stores
     records: Dict[str, Any] = dataclasses.field(default_factory=dict)
-    # kernel backend for deploy mode: "xla" | "pallas" (pallas = interpret on CPU)
-    backend: str = "xla"
+    # kernel backend for deploy mode: "auto" | "pallas" | "xla"
+    backend: str = "auto"
+    # Pallas interpret override; None resolves from the actual jax backend
+    # (compiled on TPU, interpret elsewhere)
+    interpret: Optional[bool] = None
 
     # -------------------------------------------------------------- helpers
     def _plan(self, name: str, batch_dims: int = 0) -> Optional[SitePlan]:
@@ -82,6 +101,25 @@ class QuantCtx:
             return plan.method.apply(w, self.wstates[name], plan.weight)
         return w
 
+    def _deploy_matmul(self, name: str, x: jax.Array, qt: QTensor,
+                       batch_dims: int) -> jax.Array:
+        """Serving-path matmul: every deploy-mode QTensor site dispatches
+        through ``kernels/ops.qtensor_matmul`` under the backend policy."""
+        from repro.kernels import ops as kops
+        a_state = None
+        if batch_dims == 0 and not qt.packed and qt.bits == 8:
+            plan = self._plan(name)
+            if (plan is not None and plan.act is not None
+                    and name in self.astates):
+                a_state = lsq.deploy_astate(self.astates[name], plan.act)
+        if a_state is None:
+            # no integer-activation grid for this site: quantize (or pass
+            # through) activations the usual way, weight stays integer
+            x = self._act(name, x)
+        return kops.qtensor_matmul(x, qt, a_state=a_state,
+                                   backend=self.backend,
+                                   interpret=self.interpret)
+
     # ------------------------------------------------------------------ ops
     def get_weight(self, name: str, w: Any, batch_dims: int = 0) -> jax.Array:
         """Effective (fake-quant / dequantized) weight for custom einsums
@@ -97,12 +135,11 @@ class QuantCtx:
         """
         if self.mode == "capture":
             self.records.setdefault(name, []).append(x)
-        x_eff = self._act(name, x)
         if (self.mode == "deploy" and isinstance(w, QTensor)
-                and self.backend == "pallas" and batch_dims == 0):
-            from repro.kernels import ops as kops
-            y = kops.qtensor_matmul(x_eff, w, interpret=True)
+                and batch_dims in (0, 1)):
+            y = self._deploy_matmul(name, x, w, batch_dims)
         else:
+            x_eff = self._act(name, x)
             w_eff = self._weight(name, w, batch_dims)
             if batch_dims == 0:
                 y = x_eff @ w_eff.astype(x_eff.dtype)
@@ -115,7 +152,8 @@ class QuantCtx:
 
     def conv2d(self, name: str, x: jax.Array, w: Any, b: Optional[jax.Array] = None,
                stride=(1, 1), padding="SAME") -> jax.Array:
-        """x: (N,H,W,Cin), w: (kh,kw,Cin,Cout)."""
+        """x: (N,H,W,Cin), w: (kh,kw,Cin,Cout). Deploy-mode conv QTensors
+        dequantize (no Pallas conv kernel yet — see ROADMAP Serving path)."""
         if self.mode == "capture":
             self.records.setdefault(name, []).append(x)
         x_eff = self._act(name, x)

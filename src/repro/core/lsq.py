@@ -44,6 +44,30 @@ def apply(x: jax.Array, state: Dict[str, jax.Array], qcfg: QuantConfig) -> jax.A
     return (s * q + b).astype(x.dtype)
 
 
+def deploy_astate(state: Dict[str, jax.Array], qcfg: QuantConfig):
+    """Static int8 activation params for the W8A8 serving kernel.
+
+    Returns ``(a_scale, a_zero)`` with ``a_zero`` the *unsigned* zero point
+    on the [0, 255] grid, or None when the LSQ grid has no exact 8-bit
+    integer form (bits != 8). The learned offset β is snapped to the step
+    grid (z = round(-β/s)), so the kernel's integer codes reproduce the
+    trained fake-quant up to that sub-step shift:
+
+      asymmetric (qmin=0):  x̂ = s*(clip(round(x/s)+z, 0, 255) - z)
+      symmetric:            z = 128 centers the signed grid (clip at -128
+                            instead of LSQ's -127 on the extreme tail).
+    """
+    if qcfg.bits != 8:
+        return None
+    step = jnp.asarray(state["step"], jnp.float32)
+    if qcfg.symmetric:
+        zero = jnp.float32(128.0)
+    else:
+        zero = jnp.clip(jnp.round(-jnp.asarray(state["beta"], jnp.float32)
+                                  / step), 0.0, 255.0)
+    return step, zero
+
+
 def trainable(state: Dict[str, jax.Array]) -> Dict[str, bool]:
     return {"step": True, "beta": True}
 

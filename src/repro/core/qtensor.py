@@ -6,10 +6,17 @@ inside parameter trees, be sharded by pjit, and donated.
 
 Packing:
   - bits >= 5 .... int8 codes, one per element
-  - bits <= 4 .... two 4-bit codes per int8 byte along the *first* axis
-                   ("int4x2"); dims must be even on that axis.
+  - bits <= 4 .... two 4-bit codes per int8 byte ("int4x2") along the
+                   *contraction* axis: the first non-batch axis
+                   (``pack_axis``; axis 0 for plain ``(d_in, d_out)``
+                   weights, axis 1 for stacked expert weights
+                   ``(E, d_in, d_out)``). The dim must be even on that axis.
 Codes are stored zero-based for asymmetric quantizers (q in [0, 2^b-1]) and
 two's-complement-shifted for symmetric ones (q + 2^(b-1), still unsigned).
+
+The pack axis matches what the Pallas serving kernels consume (nibble pairs
+adjacent along K), so deploy-mode matmuls read the packed bytes straight from
+HBM; see ``kernels/dequant_matmul_w4``.
 """
 from __future__ import annotations
 
@@ -25,13 +32,14 @@ from repro.core.quant_config import QuantConfig
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class QTensor:
-    codes: jax.Array  # int8 storage (possibly nibble-packed)
+    codes: jax.Array  # uint8 storage (possibly nibble-packed)
     scale: jax.Array  # float32, broadcastable to logical shape
     zero: jax.Array   # float32, broadcastable to logical shape
     shape: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
     bits: int = dataclasses.field(metadata=dict(static=True))
     packed: bool = dataclasses.field(metadata=dict(static=True))
     dtype: str = dataclasses.field(metadata=dict(static=True), default="bfloat16")
+    pack_axis: int = dataclasses.field(metadata=dict(static=True), default=0)
 
     @property
     def logical_shape(self) -> Tuple[int, ...]:
@@ -43,31 +51,67 @@ class QTensor:
             n *= d
         return n // 2 if self.packed else n
 
+    def unpacked_codes(self) -> jax.Array:
+        """uint8 codes at the logical shape (nibbles expanded if packed)."""
+        if not self.packed:
+            return self.codes
+        return _unpack_nibbles(self.codes, axis=self.pack_axis)
 
-def _pack_nibbles(q: jax.Array) -> jax.Array:
-    """q: uint8 codes in [0,15]; pack pairs along axis 0."""
-    if q.shape[0] % 2 != 0:
-        raise ValueError(f"int4 packing needs even dim0, got {q.shape}")
-    lo = q[0::2]
-    hi = q[1::2]
+    def unpack(self) -> "QTensor":
+        """Same logical tensor with one code per byte (no nibble packing)."""
+        if not self.packed:
+            return self
+        return dataclasses.replace(self, codes=self.unpacked_codes(),
+                                   packed=False)
+
+    def pack(self, axis: int = None) -> "QTensor":
+        """Nibble-pack <=4-bit codes along ``axis`` (default: current
+        ``pack_axis``). No-op for >4-bit tensors or already-packed tensors on
+        the same axis; raises if the axis dim is odd. Used to repack tensors
+        exported unpacked (odd dims become even after padding upstream) or
+        loaded from older checkpoints packed along a different axis."""
+        axis = self.pack_axis if axis is None else axis
+        if self.bits > 4:
+            return self
+        if self.packed and axis == self.pack_axis:
+            return self
+        q = self.unpacked_codes()
+        return dataclasses.replace(self, codes=_pack_nibbles(q, axis=axis),
+                                   packed=True, pack_axis=axis)
+
+
+def _pack_nibbles(q: jax.Array, axis: int = 0) -> jax.Array:
+    """q: uint8 codes in [0,15]; pack adjacent pairs along ``axis``."""
+    if q.shape[axis] % 2 != 0:
+        raise ValueError(f"int4 packing needs even dim on axis {axis}, "
+                         f"got {q.shape}")
+    lo = jax.lax.slice_in_dim(q, 0, None, stride=2, axis=axis)
+    hi = jax.lax.slice_in_dim(q, 1, None, stride=2, axis=axis)
     return (lo | (hi << 4)).astype(jnp.uint8)
 
 
-def _unpack_nibbles(p: jax.Array) -> jax.Array:
+def _unpack_nibbles(p: jax.Array, axis: int = 0) -> jax.Array:
     lo = p & 0xF
     hi = (p >> 4) & 0xF
-    out = jnp.stack([lo, hi], axis=1)  # (n/2, 2, ...)
-    return out.reshape((p.shape[0] * 2,) + p.shape[1:])
+    out = jnp.stack([lo, hi], axis=axis + 1)  # (..., n/2, 2, ...)
+    shape = p.shape[:axis] + (p.shape[axis] * 2,) + p.shape[axis + 1:]
+    return out.reshape(shape)
 
 
 def from_codes(q_float: jax.Array, scale: jax.Array, zero: jax.Array,
                qcfg: QuantConfig, dtype=jnp.bfloat16) -> QTensor:
-    """Build a QTensor from float codes in [qmin, qmax] (observer output)."""
+    """Build a QTensor from float codes in [qmin, qmax] (observer output).
+
+    <=4-bit codes nibble-pack along the first non-batch axis (the matmul
+    contraction axis K), so ``qcfg.batch_dims`` leading axes (stacked expert
+    weights) stay addressable per-expert.
+    """
     q = jnp.round(q_float)
     offset = 0 if not qcfg.symmetric else -qcfg.qmin  # shift symmetric to unsigned
     qu = (q + offset).astype(jnp.uint8)
-    packed = qcfg.bits <= 4 and q_float.shape[0] % 2 == 0
-    codes = _pack_nibbles(qu) if packed else qu
+    pack_axis = min(qcfg.batch_dims, q_float.ndim - 1)
+    packed = qcfg.bits <= 4 and q_float.shape[pack_axis] % 2 == 0
+    codes = _pack_nibbles(qu, axis=pack_axis) if packed else qu
     return QTensor(
         codes=codes,
         scale=jnp.asarray(scale, jnp.float32),
@@ -76,10 +120,25 @@ def from_codes(q_float: jax.Array, scale: jax.Array, zero: jax.Array,
         bits=qcfg.bits,
         packed=packed,
         dtype=jnp.dtype(dtype).name,
+        pack_axis=pack_axis,
     )
 
 
+def tree_weight_bytes(tree) -> int:
+    """Effective serving bytes of a param tree: packed integer codes plus the
+    affine grid for QTensor leaves, raw nbytes for everything else. This is
+    the per-decode-step HBM weight traffic the roofline charges."""
+    total = 0
+    for leaf in jax.tree.leaves(
+            tree, is_leaf=lambda l: isinstance(l, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += leaf.nbytes_codes() + leaf.scale.nbytes + leaf.zero.nbytes
+        else:
+            total += leaf.nbytes
+    return total
+
+
 def dequantize_qtensor(qt: QTensor) -> jax.Array:
-    q = _unpack_nibbles(qt.codes) if qt.packed else qt.codes
+    q = qt.unpacked_codes()
     w = qt.scale * (q.astype(jnp.float32) - qt.zero)
     return w.astype(jnp.dtype(qt.dtype))

@@ -1,27 +1,75 @@
 """jit'd public wrappers for the Pallas kernels, with QTensor integration
-and an XLA fallback (``backend='xla'`` routes to the ref implementation —
-used by the dry-run, which compiles for the CPU backend).
+and an XLA fallback.
+
+Backend policy (shared with ``QuantCtx``): callers pass
+``backend="auto"|"pallas"|"xla"`` and optionally an explicit ``interpret``
+flag; ``resolve_backend`` turns that into a concrete dispatch against the
+actual jax backend — compiled Pallas on TPU, and on CPU either the XLA ref
+path (``auto``: fast, compiles everywhere) or interpreted Pallas
+(``pallas``: bit-exact kernel semantics for parity tests).
 """
 from __future__ import annotations
+
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.qtensor import QTensor
+from repro.core.qtensor import QTensor, dequantize_qtensor
 from repro.kernels import ref
-from repro.kernels.dequant_matmul_w4 import dequant_matmul_w4
+from repro.kernels.dequant_matmul_w4 import (dequant_matmul_batched,
+                                             dequant_matmul_w4,
+                                             dequant_matmul_w8)
 from repro.kernels.flexround_quant import flexround_quant
 from repro.kernels.qmatmul_int8 import qmatmul_int8
 
+BACKENDS = ("auto", "pallas", "xla")
 
-def flexround_fake_quant(w, state, qcfg, *, interpret: bool = True,
+
+def resolve_backend(backend: str = "auto",
+                    interpret: Optional[bool] = None) -> Tuple[str, bool]:
+    """Resolve a backend request against the actual jax backend.
+
+    Returns ``(backend, interpret)`` with backend in {"pallas", "xla"}:
+      - "auto"   -> compiled Pallas on TPU; XLA ref path elsewhere (CPU/GPU
+                    production serving should not pay interpret overhead).
+      - "pallas" -> Pallas kernels; compiled on TPU, interpret elsewhere
+                    (unless ``interpret`` is forced by the caller).
+      - "xla"    -> pure-jnp ref implementations (always compile).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+    on_tpu = jax.default_backend() == "tpu"
+    if backend == "auto":
+        backend = "pallas" if on_tpu else "xla"
+    if interpret is None:
+        interpret = not on_tpu
+    return backend, interpret
+
+
+def _row(v, n: int) -> jax.Array:
+    """Normalize a per-tensor (``()``/``(1,1)``) or per-channel
+    (``(n,)``/``(1,n)``) parameter to the kernels' (1, n) row layout."""
+    v = jnp.asarray(v, jnp.float32)
+    if v.size == 1:
+        return jnp.broadcast_to(v.reshape(1, 1), (1, n))
+    return v.reshape(1, n)
+
+
+def flexround_fake_quant(w, state, qcfg, *, interpret: Optional[bool] = None,
                          backend: str = "pallas"):
     """Kernel-backed equivalent of core.flexround.apply (no STE — forward
-    only; the training path keeps the jnp version for autodiff)."""
-    s1 = jnp.broadcast_to(state["s1"].astype(jnp.float32), (1, w.shape[-1]))
-    s3 = state["s3"].reshape(1, -1) if state["s3"].shape[-1] == w.shape[-1] \
-        else jnp.broadcast_to(state["s3"].astype(jnp.float32), (1, w.shape[-1]))
-    zero = jnp.broadcast_to(state["zero"].astype(jnp.float32), (1, w.shape[-1]))
+    only; the training path keeps the jnp version for autodiff).
+
+    Accepts the state layouts ``core.flexround.init`` produces: scalar
+    per-tensor s1/s3/zero (shape ``()`` or ``(1, 1)``) as well as
+    per-output-channel rows ``(1, N)``/``(N,)``.
+    """
+    n = w.shape[-1]
+    s1 = _row(state["s1"], n)
+    s3 = _row(state["s3"], n)
+    zero = _row(state["zero"], n)
+    backend, interpret = resolve_backend(backend, interpret)
     if backend == "xla":
         return ref.flexround_quant_ref(w, s1, state["s2"], s3, zero,
                                        qcfg.qmin, qcfg.qmax)
@@ -29,40 +77,84 @@ def flexround_fake_quant(w, state, qcfg, *, interpret: bool = True,
                            qmax=qcfg.qmax, interpret=interpret)
 
 
-def qtensor_matmul(x, qt: QTensor, *, a_state=None, interpret: bool = True,
-                   backend: str = "pallas"):
-    """x @ dequant(qt) for 2-D QTensors.
+def _lsq_int8_codes(x2, a_scale, a_zero):
+    """Quantize activations to signed int8 codes on the [0, 255] grid."""
+    a_q = jnp.clip(jnp.round(x2.astype(jnp.float32) / a_scale) + a_zero,
+                   0, 255) - 128  # shift to signed
+    return a_q.astype(jnp.int8)
 
-    - 4-bit packed weights -> W4A16 dequant-matmul kernel.
-    - 8-bit weights + a_state (activation int8 params) -> W8A8 int kernel.
-    - 8-bit weights, no a_state -> dequant + bf16 matmul (weight-only int8).
-    """
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    scale = jnp.broadcast_to(qt.scale, (1, qt.shape[-1])).astype(jnp.float32)
-    zero = jnp.broadcast_to(qt.zero, (1, qt.shape[-1])).astype(jnp.float32)
-    if qt.packed:
+
+def _matmul_2d(x2, qt: QTensor, a_state, backend: str, interpret: bool):
+    N = qt.shape[-1]
+    scale = _row(qt.scale, N)
+    zero = _row(qt.zero, N)
+    if qt.packed and qt.pack_axis == 0:
         if backend == "xla":
-            out = ref.dequant_matmul_w4_ref(x2, qt.codes, scale, zero)
-        else:
-            out = dequant_matmul_w4(x2, qt.codes, scale, zero,
-                                    interpret=interpret)
-    elif a_state is not None:
-        # dynamic per-tensor activation quantization to int8
+            return ref.dequant_matmul_w4_ref(x2, qt.codes, scale, zero)
+        return dequant_matmul_w4(x2, qt.codes, scale, zero,
+                                 interpret=interpret)
+    codes = qt.unpacked_codes()  # (K, N) uint8
+    if a_state is not None and qt.bits == 8:
+        # static activation states: true integer W8A8 matmul. Codes are
+        # re-centered at 128 so both operands fit int8; the affine zero
+        # offsets become exact rank-1 corrections inside the kernel.
         a_scale, a_zero = a_state
-        a_q = jnp.clip(jnp.round(x2.astype(jnp.float32) / a_scale) + a_zero,
-                       0, 255) - 128  # shift to signed
-        a_q = a_q.astype(jnp.int8)
-        b_q = (qt.codes.astype(jnp.int32) - jnp.round(qt.zero).astype(jnp.int32)
-               ).astype(jnp.int8)
+        a_q = _lsq_int8_codes(x2, a_scale, a_zero)
+        b_q = (codes.astype(jnp.int32) - 128).astype(jnp.int8)
+        b_zero = zero - 128.0
         if backend == "xla":
             out = ref.qmatmul_int8_ref(a_q, b_q, a_scale, a_zero - 128.0,
-                                       scale)
+                                       scale, b_zero=b_zero)
         else:
             out = qmatmul_int8(a_q, b_q, a_scale, a_zero - 128.0, scale,
-                               interpret=interpret)
-        out = out.astype(x.dtype)
-    else:
-        from repro.core.qtensor import dequantize_qtensor
-        out = x2 @ dequantize_qtensor(qt).astype(x2.dtype)
-    return out.reshape(lead + (qt.shape[-1],)).astype(x.dtype)
+                               b_zero=b_zero, interpret=interpret)
+        return out
+    if backend == "xla":
+        return ref.dequant_matmul_w8_ref(x2, codes, scale, zero)
+    return dequant_matmul_w8(x2, codes, scale, zero, interpret=interpret)
+
+
+def _matmul_batched(x3, qt: QTensor, backend: str, interpret: bool):
+    """x3 (E, M, K) @ per-expert dequant(qt (E, K, N)) -> (E, M, N)."""
+    E, K, N = qt.shape
+    scale = jnp.broadcast_to(jnp.asarray(qt.scale, jnp.float32), (E, 1, N))
+    zero = jnp.broadcast_to(jnp.asarray(qt.zero, jnp.float32), (E, 1, N))
+    packed = qt.packed and qt.pack_axis == 1
+    codes = qt.codes if packed else qt.unpacked_codes()
+    if backend == "xla":
+        return ref.dequant_matmul_batched_ref(x3, codes, scale, zero, packed)
+    return dequant_matmul_batched(x3, codes, scale, zero, packed=packed,
+                                  interpret=interpret)
+
+
+def qtensor_matmul(x, qt: QTensor, *, a_state=None, backend: str = "auto",
+                   interpret: Optional[bool] = None):
+    """x @ dequant(qt) — the deploy-mode serving matmul for every QTensor
+    layout:
+
+    - 4-bit K-packed weights -> W4A16 dequant-matmul kernel.
+    - 8-bit weights + a_state (activation int8 params (a_scale, a_zero) with
+      a_zero the unsigned zero point in [0, 255]) -> W8A8 integer kernel.
+    - 8-bit weights, no a_state (and <=4-bit weights that could not pack)
+      -> W8A16 dequant-matmul kernel.
+    - stacked expert weights (E, K, N) with x (..., E, n, K) -> grid-extended
+      per-expert dequant-matmul (activations pre-quantized by the caller).
+    """
+    backend, interpret = resolve_backend(backend, interpret)
+    n_batch = len(qt.shape) - 2
+    if n_batch == 0:
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        out = _matmul_2d(x2, qt, a_state, backend, interpret)
+        return out.reshape(lead + (qt.shape[-1],)).astype(x.dtype)
+    if n_batch == 1:
+        E, K, N = qt.shape
+        n = x.shape[-2]
+        lead = x.shape[:-3]
+        # (..., E, n, K) -> (E, prod(lead)*n, K)
+        x3 = jnp.moveaxis(x.reshape((-1, E, n, K)), 1, 0).reshape(E, -1, K)
+        out = _matmul_batched(x3, qt, backend, interpret)
+        out = jnp.moveaxis(out.reshape((E, -1, n, N)), 0, 1)
+        return out.reshape(lead + (E, n, N)).astype(x.dtype)
+    # >1 batch dims: no kernel variant — dequantize (still correct, not fast)
+    return (x @ dequantize_qtensor(qt).astype(x.dtype)).astype(x.dtype)

@@ -16,27 +16,54 @@ def flexround_quant_ref(w, s1, s2, s3, zero, qmin: int, qmax: int):
     return (s1 * (q - zero)).astype(w.dtype)
 
 
-def qmatmul_int8_ref(a_q, b_q, a_scale, a_zero, b_scale, out_dtype=jnp.float32):
-    """W8A8 integer matmul.
+def qmatmul_int8_ref(a_q, b_q, a_scale, a_zero, b_scale, b_zero=None,
+                     out_dtype=jnp.float32):
+    """W8A8 integer matmul with affine corrections.
 
     a_q (M, K) int8 codes of activations:  a = a_scale * (a_q - a_zero)
-    b_q (K, N) int8 codes of weights:      b = b_scale * b_q   (symmetric)
-    b_scale: (1, N) per-out-channel or (1, 1).
+    b_q (K, N) int8 codes of weights:      b = b_scale * (b_q - b_zero)
+    b_scale/b_zero: (1, N) per-out-channel or (1, 1); b_zero=None means
+    symmetric weights (b = b_scale * b_q).
     """
     acc = jnp.dot(a_q.astype(jnp.int32), b_q.astype(jnp.int32),
-                  preferred_element_type=jnp.int32)
-    colsum = jnp.sum(b_q.astype(jnp.int32), axis=0, keepdims=True)
-    out = a_scale * b_scale * (acc.astype(jnp.float32)
-                               - a_zero * colsum.astype(jnp.float32))
-    return out.astype(out_dtype)
+                  preferred_element_type=jnp.int32).astype(jnp.float32)
+    K = a_q.shape[1]
+    colsum = jnp.sum(b_q.astype(jnp.int32), axis=0,
+                     keepdims=True).astype(jnp.float32)
+    out = acc - a_zero * colsum
+    if b_zero is not None:
+        rowsum = jnp.sum(a_q.astype(jnp.int32), axis=1,
+                         keepdims=True).astype(jnp.float32)
+        out = out - rowsum * b_zero + K * a_zero * b_zero
+    return (a_scale * b_scale * out).astype(out_dtype)
+
+
+def _unpack_f32(codes, axis=0):
+    from repro.core.qtensor import _unpack_nibbles
+    return _unpack_nibbles(codes, axis=axis).astype(jnp.float32)
 
 
 def dequant_matmul_w4_ref(x, codes, scale, zero, out_dtype=None):
     """W4A16 matmul: x (M, K) bf16 @ dequant(codes) where codes are
     nibble-packed (K//2, N) uint8, scale/zero (1, N) or (1, 1) float32."""
-    lo = (codes & 0xF).astype(jnp.float32)
-    hi = ((codes >> 4) & 0xF).astype(jnp.float32)
-    q = jnp.stack([lo, hi], axis=1).reshape(codes.shape[0] * 2, codes.shape[1])
-    w = scale * (q - zero)
+    w = scale * (_unpack_f32(codes) - zero)
     out = jnp.dot(x.astype(jnp.float32), w)
+    return out.astype(out_dtype or x.dtype)
+
+
+def dequant_matmul_w8_ref(x, codes, scale, zero, out_dtype=None):
+    """W8A16 weight-only matmul: x (M, K) @ dequant(codes (K, N) uint8)."""
+    w = scale * (codes.astype(jnp.float32) - zero)
+    out = jnp.dot(x.astype(jnp.float32), w)
+    return out.astype(out_dtype or x.dtype)
+
+
+def dequant_matmul_batched_ref(x, codes, scale, zero, packed: bool,
+                               out_dtype=None):
+    """Per-expert dequant matmul: x (E, M, K) @ dequant(codes[e]) for each
+    expert e. codes (E, K//2, N) packed uint8 or (E, K, N) uint8;
+    scale/zero broadcastable to (E, 1, N)."""
+    q = _unpack_f32(codes, axis=1) if packed else codes.astype(jnp.float32)
+    w = scale * (q - zero)  # (E, K, N)
+    out = jnp.einsum("emk,ekn->emn", x.astype(jnp.float32), w)
     return out.astype(out_dtype or x.dtype)

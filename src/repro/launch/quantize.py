@@ -53,6 +53,16 @@ def main():
                     help="CheckpointManager dir of a trained model")
     ap.add_argument("--resume-dir", default=None)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "pallas", "xla"],
+                    help="deploy-mode kernel dispatch: auto = compiled "
+                         "Pallas on TPU / XLA ref path elsewhere; pallas = "
+                         "Pallas kernels (interpreted off-TPU); xla = "
+                         "pure-jnp refs")
+    ap.add_argument("--serve-smoke", action="store_true",
+                    help="after quantization, run a short deploy-mode decode "
+                         "through the kernel serving path and report "
+                         "us/step + weight bytes moved")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -98,6 +108,50 @@ def main():
     tot1 = sum(r.err_after for r in reports)
     print(f"quantized {len(blocks)} blocks: recon err {tot0:.3e} -> "
           f"{tot1:.3e}; saved to {out}")
+
+    if args.serve_smoke:
+        serve_smoke(model, qparams, astates, recipe, cfg,
+                    backend=args.backend)
+
+
+def serve_smoke(model, qparams, astates, recipe, cfg, *, backend: str = "auto",
+                batch: int = 2, prompt_len: int = 16, steps: int = 8) -> float:
+    """Short deploy-mode decode through the kernel serving path.
+
+    Prefills a tiny batch and times ``steps`` greedy decode steps with the
+    quantized weights dispatched through ``kernels/ops.qtensor_matmul`` under
+    the requested backend. Returns us/step (also printed, with the effective
+    weight bytes each step moves)."""
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.core.context import QuantCtx
+    from repro.core.qtensor import tree_weight_bytes
+
+    if not hasattr(model, "decode_step"):
+        print(f"serve-smoke: {cfg.name} has no decode path; skipping")
+        return float("nan")
+    ctx = QuantCtx(mode="deploy", recipe=recipe, astates=astates,
+                   backend=backend)
+    tokens = jax.random.randint(jax.random.key(0), (batch, prompt_len), 0,
+                                cfg.vocab)
+    cache = model.init_cache(batch, prompt_len + steps + 1)
+    prefill = jax.jit(lambda p, t, c: model.prefill(p, t, c, ctx))
+    step = jax.jit(lambda p, t, c, pos: model.decode_step(p, t, c, pos, ctx))
+    _, cache = prefill(qparams, tokens, cache)
+    tok = tokens[:, -1:]
+    logits, cache = step(qparams, tok, cache, jnp.int32(prompt_len))  # warm
+    t0 = time.perf_counter()
+    for i in range(steps):
+        logits, cache = step(qparams, tok, cache,
+                             jnp.int32(prompt_len + 1 + i))
+    jax.block_until_ready(logits)
+    us = (time.perf_counter() - t0) / steps * 1e6
+    wbytes = tree_weight_bytes(qparams)
+    print(f"serve-smoke[{backend}]: {us:.1f} us/step, "
+          f"weight bytes/step {wbytes / 2**20:.2f} MiB")
+    return us
 
 
 if __name__ == "__main__":

@@ -60,7 +60,11 @@ def quantize_param_shapes(shapes: Any, cfg, bits: int = 8) -> Any:
                    and not any(isinstance(p, int) for p in parts))
         shape = list(leaf.shape)
         logical = tuple(shape[1:]) if stacked else tuple(shape)
-        pack_dim = 1 if stacked else 0
+        # nibble-pack along the first non-batch axis of the *logical* tensor
+        # (K for linears; E-stacked experts keep per-expert addressing), the
+        # layout core.qtensor.from_codes produces and the kernels consume
+        batch_dims = 1 if (is_expert and len(logical) == 3) else 0
+        pack_dim = (1 if stacked else 0) + batch_dims
         packed = bits <= 4 and shape[pack_dim] % 2 == 0
         cshape = list(shape)
         if packed:
@@ -74,6 +78,7 @@ def quantize_param_shapes(shapes: Any, cfg, bits: int = 8) -> Any:
             bits=bits,
             packed=packed,
             dtype=cfg.dtype,
+            pack_axis=batch_dims,
         )
 
     return jax.tree_util.tree_map_with_path(rule, shapes)

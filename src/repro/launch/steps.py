@@ -124,7 +124,7 @@ def train_cell(cfg, shape: ShapeSpec, mesh, mode: Optional[str] = None,
 # ------------------------------------------------------------------ serve
 def make_prefill_step(model, cfg):
     def prefill_step(params, tokens, cache, extra=None):
-        ctx = QuantCtx(mode="deploy", backend="xla")
+        ctx = QuantCtx(mode="deploy", backend="auto")
         if cfg.family == "encdec":
             h, cache = model.prefill(params, tokens, extra, cache, ctx)
         elif cfg.family == "vlm":
@@ -151,7 +151,7 @@ def make_serve_step(model, cfg):
     """One decode step: insert token, attend against cache, next token."""
 
     def serve_step(params, token, cache, pos):
-        ctx = QuantCtx(mode="deploy", backend="xla")
+        ctx = QuantCtx(mode="deploy", backend="auto")
         logits, cache = model.decode_step(params, token, cache, pos, ctx)
         next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         return next_tok, cache

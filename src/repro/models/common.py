@@ -19,7 +19,9 @@ def stack_layers(layers):
     to same-treedef trees with different leaf shapes (e.g. a per-channel
     granularity rule on one layer), so when the layers are heterogeneous in
     either way this falls back to a plain list — consumed by the
-    eager-unroll path of ``scan_layers``.
+    eager-unroll path of ``scan_layers``. QTensor leaves in either form hit
+    the kernel-backed deploy matmuls via ``ctx.linear`` (the unrolled layers
+    each dispatch their own bit-width to the matching kernel).
     """
     same_tree = len({jax.tree.structure(l) for l in layers}) == 1
     if same_tree and len({tuple(jnp.shape(x) for x in jax.tree.leaves(l))

@@ -9,7 +9,10 @@ Sharding: group axis -> data mesh axis, expert axis -> model mesh axis
 (deepseek's 256 experts additionally split over data; see launch/sharding).
 Router weights stay full-precision (tiny + accuracy-critical); expert
 weights are quantizable through ctx.linear with batch_dims=1 (per-expert
-FlexRound scales, paper Eq. 2 applied expert-wise).
+FlexRound scales, paper Eq. 2 applied expert-wise). In deploy mode the
+stacked (E, d_in, d_out) QTensor experts dispatch to the grid-extended
+per-expert dequant-matmul kernel (kernels/dequant_matmul_w4) — the expert
+stack is never dequantized to HBM at serving time.
 """
 from __future__ import annotations
 

@@ -1,0 +1,222 @@
+"""Deploy-path parity suite: for every QTensor layout the serving path
+supports (W4-packed, W8 weight-only, W8A8, batched expert weights), the
+Pallas kernel (interpret mode), the pure-jnp ref oracle, and the plain
+``dequantize_qtensor`` matmul must agree — and the ``backend="auto"`` policy
+must resolve correctly off-TPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flexround, lsq, rtn
+from repro.core.context import QuantCtx
+from repro.core.qtensor import QTensor, dequantize_qtensor, from_codes
+from repro.core.quant_config import QuantConfig, QuantRecipe
+from repro.kernels import ops as kops
+from repro.kernels import ref
+
+KEY = jax.random.key(0)
+
+
+def _export(shape, bits, granularity="per_channel", batch_dims=0):
+    qcfg = QuantConfig(bits=bits, symmetric=False, observer="minmax",
+                      granularity=granularity, batch_dims=batch_dims)
+    w = jax.random.normal(KEY, shape, jnp.float32) * 0.1
+    qt = rtn.export(w, rtn.init(w, qcfg), qcfg, dtype=jnp.float32)
+    return qt
+
+
+def _assert_parity(x, qt, want, **kw):
+    """xla ref path and interpreted Pallas path both match ``want``."""
+    for backend in ("xla", "pallas"):
+        got = kops.qtensor_matmul(x, qt, backend=backend, interpret=True, **kw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"backend={backend}")
+
+
+@pytest.mark.parametrize("granularity", ["per_tensor", "per_channel"])
+def test_w4_packed_parity(granularity):
+    qt = _export((128, 64), 4, granularity)
+    assert qt.packed and qt.pack_axis == 0
+    x = jax.random.normal(jax.random.key(1), (3, 9, 128), jnp.float32)
+    want = x @ dequantize_qtensor(qt)
+    _assert_parity(x, qt, want)
+
+
+@pytest.mark.parametrize("granularity", ["per_tensor", "per_channel"])
+def test_w8_weight_only_parity(granularity):
+    qt = _export((96, 48), 8, granularity)
+    assert not qt.packed
+    x = jax.random.normal(jax.random.key(2), (7, 96), jnp.float32)
+    want = x @ dequantize_qtensor(qt)
+    _assert_parity(x, qt, want)
+
+
+def test_w4_unpacked_odd_dim_parity():
+    """Odd d_in cannot nibble-pack; falls through to the W8-style kernel."""
+    qt = _export((33, 48), 4)
+    assert not qt.packed
+    x = jax.random.normal(jax.random.key(3), (5, 33), jnp.float32)
+    want = x @ dequantize_qtensor(qt)
+    _assert_parity(x, qt, want)
+
+
+def test_w8a8_parity():
+    """Integer kernel == snapped-grid fake-quant matmul (exact) and ==
+    LSQ fake-quant matmul (within one activation step)."""
+    qt = _export((96, 48), 8)
+    x = jax.random.normal(jax.random.key(4), (11, 96), jnp.float32)
+    aq = QuantConfig(bits=8, symmetric=False, granularity="per_tensor",
+                     observer="minmax")
+    astate = lsq.init(jnp.asarray([float(x.min()), float(x.max())]), aq)
+    a_scale, a_zero = lsq.deploy_astate(astate, aq)
+    x_snap = a_scale * (jnp.clip(jnp.round(x / a_scale) + a_zero, 0, 255)
+                        - a_zero)
+    want = x_snap @ dequantize_qtensor(qt)
+    _assert_parity(x, qt, want, a_state=(a_scale, a_zero))
+    # the trained (fake-quant) forward differs only by the sub-step β snap
+    x_lsq = lsq.apply(x, astate, aq)
+    want_lsq = x_lsq @ dequantize_qtensor(qt)
+    got = kops.qtensor_matmul(x, qt, a_state=(a_scale, a_zero), backend="xla")
+    denom = float(jnp.linalg.norm(want_lsq)) + 1e-9
+    assert float(jnp.linalg.norm(got - want_lsq)) / denom < 0.02
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_batched_expert_parity(bits):
+    """batch_dims=1 stacked expert weights: per-expert kernel == per-expert
+    dequant einsum. 4-bit packs along the contraction axis (pack_axis=1)."""
+    qcfg = QuantConfig(bits=bits, symmetric=False, observer="minmax",
+                       granularity="per_channel", batch_dims=1)
+    w = jax.random.normal(KEY, (3, 128, 64), jnp.float32) * 0.1
+    st = flexround.init(w, qcfg)
+    qt = flexround.export(w, st, qcfg, dtype=jnp.float32)
+    if bits == 4:
+        assert qt.packed and qt.pack_axis == 1
+        assert qt.codes.shape == (3, 64, 64)
+    x = jax.random.normal(jax.random.key(5), (2, 3, 5, 128), jnp.float32)
+    want = jnp.einsum("geni,eio->geno", x, dequantize_qtensor(qt))
+    _assert_parity(x, qt, want)
+
+
+def test_backend_auto_resolves_on_cpu():
+    backend, interpret = kops.resolve_backend("auto")
+    if jax.default_backend() == "tpu":
+        assert backend == "pallas" and interpret is False
+    else:
+        # production serving off-TPU must not pay Pallas interpret overhead
+        assert backend == "xla"
+        assert kops.resolve_backend("pallas") == ("pallas", True)
+    with pytest.raises(ValueError):
+        kops.resolve_backend("cuda")
+
+
+def test_ctx_linear_deploy_routes_through_kernels(monkeypatch):
+    """Every deploy-mode QTensor matmul goes through kops.qtensor_matmul."""
+    calls = []
+    orig = kops.qtensor_matmul
+
+    def spy(x, qt, **kw):
+        calls.append(qt.shape)
+        return orig(x, qt, **kw)
+
+    monkeypatch.setattr(kops, "qtensor_matmul", spy)
+    ctx = QuantCtx(mode="deploy")
+    qt2 = _export((32, 16), 8)
+    x2 = jax.random.normal(jax.random.key(6), (4, 32), jnp.float32)
+    y2 = ctx.linear("site.a", x2, qt2)
+    qcfg = QuantConfig(bits=4, symmetric=False, observer="minmax",
+                       granularity="per_channel", batch_dims=1)
+    w3 = jax.random.normal(KEY, (2, 32, 16), jnp.float32) * 0.1
+    qt3 = rtn.export(w3, rtn.init(w3, qcfg), qcfg, dtype=jnp.float32)
+    x3 = jax.random.normal(jax.random.key(7), (2, 3, 32), jnp.float32)
+    y3 = ctx.linear("site.b", x3, qt3, batch_dims=1)
+    assert calls == [(32, 16), (2, 32, 16)]
+    np.testing.assert_allclose(np.asarray(y2),
+                               np.asarray(x2 @ dequantize_qtensor(qt2)),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(y3),
+        np.asarray(jnp.einsum("eni,eio->eno", x3, dequantize_qtensor(qt3))),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_ctx_deploy_w8a8_uses_integer_path():
+    """With static LSQ astates, deploy no longer fake-quantizes activations:
+    output matches the integer kernel exactly."""
+    recipe = QuantRecipe(method="flexround", w_bits=8, a_bits=8)
+    qt = _export((64, 32), 8)
+    x = jax.random.normal(jax.random.key(8), (6, 64), jnp.float32)
+    aq = recipe.resolve("s").act
+    astate = lsq.init(jnp.asarray([float(x.min()), float(x.max())]), aq)
+    ctx = QuantCtx(mode="deploy", recipe=recipe, astates={"s": astate})
+    got = ctx.linear("s", x, qt)
+    want = kops.qtensor_matmul(x, qt,
+                               a_state=lsq.deploy_astate(astate, aq))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_qtensor_pack_utilities():
+    """pack()/unpack()/unpacked_codes() round-trip; repacking to a different
+    axis preserves the dequantized tensor."""
+    qt = _export((3, 16, 8), 4, batch_dims=1)
+    assert qt.packed and qt.pack_axis == 1
+    want = dequantize_qtensor(qt)
+    unpacked = qt.unpack()
+    assert not unpacked.packed and unpacked.codes.shape == (3, 16, 8)
+    np.testing.assert_array_equal(np.asarray(dequantize_qtensor(unpacked)),
+                                  np.asarray(want))
+    repacked = unpacked.pack(axis=2)
+    assert repacked.packed and repacked.pack_axis == 2
+    assert repacked.codes.shape == (3, 16, 4)
+    np.testing.assert_array_equal(np.asarray(dequantize_qtensor(repacked)),
+                                  np.asarray(want))
+    assert qt.pack() is qt  # no-op on same axis
+    w8 = _export((16, 8), 8)
+    assert w8.pack() is w8  # >4 bits never packs
+
+
+def test_flexround_fake_quant_scalar_s1():
+    """Regression: ops.flexround_fake_quant must honor scalar per-tensor
+    s1/s3/zero (shape () or (1, 1)) exactly like per-channel rows."""
+    qcfg = QuantConfig(bits=4, symmetric=True, observer="minmax")
+    w = jax.random.normal(KEY, (16, 8), jnp.float32)
+    s2 = jnp.exp(0.05 * jax.random.normal(jax.random.key(9), (16, 8)))
+    for mk in (lambda v: jnp.float32(v),            # shape ()
+               lambda v: jnp.full((1, 1), v)):      # shape (1, 1)
+        st = {"s1": mk(0.01), "zero": mk(0.0), "s2": s2, "s3": mk(1.0)}
+        want = ref.flexround_quant_ref(
+            w, jnp.full((1, 8), 0.01), s2, jnp.ones((1, 8)),
+            jnp.zeros((1, 8)), qcfg.qmin, qcfg.qmax)
+        for backend in ("xla", "pallas"):
+            got = kops.flexround_fake_quant(w, st, qcfg, backend=backend,
+                                            interpret=True)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_qmatmul_int8_asymmetric_weights():
+    """b_zero correction: integer kernel == float dequant matmul for
+    asymmetric weight grids (zero far from center)."""
+    from repro.kernels.qmatmul_int8 import qmatmul_int8
+    k1, k2 = jax.random.split(KEY)
+    M, K, N = 16, 130, 48  # K not a block multiple: padding must stay exact
+    a_q = jax.random.randint(k1, (M, K), -128, 128, jnp.int8)
+    b_u = jax.random.randint(k2, (K, N), 0, 256).astype(jnp.uint8)
+    b_scale = jnp.full((1, N), 0.02, jnp.float32)
+    b_zero_u = jnp.round(jax.random.uniform(k2, (1, N)) * 255)
+    a_scale, a_zero = jnp.float32(0.05), jnp.float32(-3.0)
+    b_q = (b_u.astype(jnp.int32) - 128).astype(jnp.int8)
+    b_zero = b_zero_u - 128.0
+    want = ((a_scale * (a_q.astype(jnp.float32) - a_zero))
+            @ (b_scale * (b_u.astype(jnp.float32) - b_zero_u)))
+    got_ref = ref.qmatmul_int8_ref(a_q, b_q, a_scale, a_zero, b_scale,
+                                   b_zero=b_zero)
+    got_krn = qmatmul_int8(a_q, b_q, a_scale, a_zero, b_scale, b_zero,
+                           block_m=8, block_n=16, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got_krn), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)

@@ -38,6 +38,8 @@ for mp in (False, True):
                             donate_argnums=prog.donate_argnums
                             ).lower(*prog.args).compile()
             ca = c.cost_analysis()
+            if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+                ca = ca[0]
             out.append({"arch": arch, "kind": shp.kind, "mp": mp,
                         "flops": float(ca.get("flops", 0))})
 print(json.dumps(out))

@@ -94,7 +94,9 @@ def test_dequant_matmul_w4_kernel(mkn, dtype):
 
 
 def test_qtensor_matmul_paths():
-    """ops.qtensor_matmul agrees with dequant matmul for int8 and int4."""
+    """ops.qtensor_matmul agrees with dequant matmul for int8 and int4
+    (kernel dispatch pinned to the Pallas path; the backend-policy and
+    xla-path coverage lives in tests/test_deploy_parity.py)."""
     from repro.kernels import ops as kops
     for bits in (8, 4):
         qcfg = QuantConfig(bits=bits, symmetric=False, observer="minmax",
@@ -105,6 +107,41 @@ def test_qtensor_matmul_paths():
         x = jax.random.normal(jax.random.key(1), (4, 16, 128), jnp.float32)
         from repro.core.qtensor import dequantize_qtensor
         want = x @ dequantize_qtensor(qt)
-        got = kops.qtensor_matmul(x, qt, interpret=True)
+        got = kops.qtensor_matmul(x, qt, backend="pallas", interpret=True)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("packed", [True, False])
+def test_dequant_matmul_batched_kernel(packed):
+    """Grid-extended expert variant vs the per-expert jnp oracle."""
+    from repro.kernels.dequant_matmul_w4 import dequant_matmul_batched
+    E, M, K, N = 3, 16, 128, 256
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = jax.random.normal(k1, (E, M, K), jnp.float32) * 0.5
+    kc = K // 2 if packed else K
+    codes = jax.random.randint(k2, (E, kc, N), 0, 256).astype(jnp.uint8)
+    scale = jnp.exp(jax.random.normal(k3, (E, 1, N)) * 0.2) * 0.02
+    zero = jnp.round(jax.random.uniform(k3, (E, 1, N)) * 15)
+    got = dequant_matmul_batched(x, codes, scale, zero, packed=packed,
+                                 block_m=8, block_n=128, block_k=64,
+                                 interpret=True)
+    want = ref.dequant_matmul_batched_ref(x, codes, scale, zero, packed)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mkn", [(8, 128, 128), (16, 130, 256)])
+def test_dequant_matmul_w8_kernel(mkn):
+    from repro.kernels.dequant_matmul_w4 import dequant_matmul_w8
+    M, K, N = mkn
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = jax.random.normal(k1, (M, K), jnp.float32) * 0.5
+    codes = jax.random.randint(k2, (K, N), 0, 256).astype(jnp.uint8)
+    scale = jnp.exp(jax.random.normal(k3, (1, N)) * 0.2) * 0.02
+    zero = jnp.round(jax.random.uniform(k3, (1, N)) * 255)
+    got = dequant_matmul_w8(x, codes, scale, zero, block_m=8, block_n=128,
+                            block_k=64, interpret=True)
+    want = ref.dequant_matmul_w8_ref(x, codes, scale, zero)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
