@@ -81,14 +81,41 @@ def eval_ppl(model, params, n_batches: int = 8, ctx: Optional[QuantCtx] = None,
 
 
 def ptq(model, params, recipe: QuantRecipe, n_calib: int = 64,
-        as_qtensor: bool = False):
+        as_qtensor: bool = False, engine: str = "scan"):
     """Full PTQ of the bench LM; returns (quantized params, astates, reports)."""
     src = SyntheticTokens(vocab=BENCH_CFG.vocab, seq_len=SEQ, seed=0)
     cal = CalibrationSet.build(src, n_calib)
     x0, blocks, assemble = model.quant_blocks(params, cal.tokens)
     finalized, astates, reports = quantize_blocks(
-        blocks, recipe, x0, as_qtensor=as_qtensor)
+        blocks, recipe, x0, as_qtensor=as_qtensor, engine=engine)
     return assemble(finalized), astates, reports
+
+
+def make_block_chain(n_blocks: int, d: int = 32, d_hidden: int = 64,
+                     seed: int = 0):
+    """Chain of structurally identical MLP blocks sharing one apply_key —
+    the minimal stand-in for a transformer's L identical layers (used to
+    show compile_count stays flat as the block count grows)."""
+    from repro.core.reconstruct import BlockHandle, Site
+
+    token = (object(),)  # fresh per chain; shared across its blocks
+    blocks = []
+    for i, key in enumerate(jax.random.split(jax.random.key(seed), n_blocks)):
+        k1, k2 = jax.random.split(key)
+        name = f"layers.{i}"
+        params = {
+            "w1": jax.random.normal(k1, (d, d_hidden), jnp.float32) * d**-0.5,
+            "w2": jax.random.normal(k2, (d_hidden, d), jnp.float32) * d_hidden**-0.5,
+        }
+
+        def apply_fn(p, x, ctx, _n=name):
+            h = jax.nn.gelu(ctx.linear(f"{_n}.w1", x, p["w1"]))
+            return ctx.linear(f"{_n}.w2", h, p["w2"]) + x
+
+        sites = {f"{name}.w1": Site(("w1",)), f"{name}.w2": Site(("w2",))}
+        blocks.append(BlockHandle(name, params, apply_fn, sites,
+                                  apply_key=token))
+    return blocks
 
 
 def timed_decode(model, params, ctx: QuantCtx, tokens, *, reps: int = 8

@@ -1,20 +1,45 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Run:
-    PYTHONPATH=src python -m benchmarks.run [--only tableN]
+    PYTHONPATH=src python -m benchmarks.run [--only tableN] [--json out.json]
+
+``--json`` additionally writes the rows as a list of records (the ``derived``
+key=value pairs parsed into typed fields) — CI jobs upload these to build
+perf trajectories.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+
+
+def rows_to_records(rows):
+    """``name,us_per_call,derived`` CSV lines -> JSON-able dicts."""
+    records = []
+    for line in rows:
+        name, us, derived = line.split(",", 2)
+        rec = {"name": name, "us_per_call": float(us)}
+        for pair in filter(None, derived.split(";")):
+            k, eq, v = pair.partition("=")
+            if not eq:
+                continue
+            try:
+                rec[k] = float(v)
+            except ValueError:
+                rec[k] = v
+        records.append(rec)
+    return records
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on table function names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON records to PATH")
     args = ap.parse_args()
 
     from benchmarks.tables import ALL_TABLES
@@ -34,6 +59,10 @@ def main() -> None:
             print(f"# {fn.__name__} FAILED:", file=sys.stderr)
             traceback.print_exc()
     print("\n".join(rows), flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows_to_records(rows[1:]), f, indent=1)
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -244,6 +244,83 @@ def bench_decode(out: List[str]):
         run(qparams, tag)
 
 
+def bench_recon(out: List[str]):
+    """Reconstruction-throughput benchmark (the PTQ hot path itself).
+
+    Two model scales, both engines each:
+
+      recon/{w4,mixed}/*   the smoke LM (compute-bound on the CPU runner —
+                           the fusion win shows mostly in compile_count and
+                           the removed per-step dispatch; TPU wall-clock
+                           trajectories come from compiled runs)
+      recon/chain-L{2,6}/* identical-structure MLP chains, the dispatch-bound
+                           regime where the scanned engine's >=5x steps_per_s
+                           over the legacy loop is visible on CPU, and where
+                           compile_count must stay flat (L2 vs L6) while the
+                           legacy loop's grows with the block count
+
+    derived columns:
+      steps_per_s      median per-block loop throughput (steady state; the
+                       scanned engine's one-time compile lands in the first
+                       block, legacy recompiles every block)
+      agg_steps_per_s  total optimization steps / total loop seconds,
+                       compile included (what a single PTQ run experiences)
+      compile_count    actual XLA trace count across step/teacher/student/
+                       recon_error/schedule
+      sec_per_block    wall-clock of the full PTQ divided by block count
+    """
+    import statistics
+
+    from repro.core import reconstruct as rec
+    from repro.core.reconstruct import quantize_blocks
+
+    def derived(reports, wall, n_blocks):
+        st = rec.engine_stats()
+        steps = sum(r.iters for r in reports)
+        loop = sum(r.iters / max(r.steps_per_s, 1e-9) for r in reports)
+        med = statistics.median(r.steps_per_s for r in reports)
+        return (f"steps_per_s={med:.1f};"
+                f"agg_steps_per_s={steps / max(loop, 1e-9):.1f};"
+                f"compile_count={st.compile_count};"
+                f"sec_per_block={wall / n_blocks:.3f}")
+
+    model, params = common.get_trained_lm()
+    w4 = dict(method="flexround", w_bits=4, w_symmetric=True, a_bits=None,
+              w_granularity="per_channel", iters=80, lr=3e-3, batch_size=16)
+    recipes = {
+        "w4": QuantRecipe(**w4),
+        "mixed": QuantRecipe(**{**w4, "a_bits": 8, "setting": "qdrop"},
+                             rules=("layers.0.*:w_bits=8",
+                                    "layers.3.*:w_bits=8,a_bits=none")),
+    }
+    for tag, recipe in recipes.items():
+        for engine in ("scan", "legacy"):
+            rec.reset_engine_stats()
+            rec.clear_engine_cache()
+            t0 = time.perf_counter()
+            _, _, reports = common.ptq(model, params, recipe, engine=engine)
+            wall = time.perf_counter() - t0
+            out.append(common.row(f"recon/{tag}/{engine}", wall * 1e6,
+                                  derived(reports, wall, len(reports))))
+
+    # dispatch-bound multi-block chains: >=5x steps_per_s and flat
+    # compile_count for the scanned engine
+    x = jax.random.normal(jax.random.key(11), (64, 32), jnp.float32)
+    recipe = QuantRecipe(method="flexround", w_bits=4, w_symmetric=True,
+                         a_bits=8, iters=100, lr=3e-3, batch_size=16)
+    for n_blocks in (2, 6):
+        blocks = common.make_block_chain(n_blocks)
+        for engine in ("scan", "legacy"):
+            rec.reset_engine_stats()
+            rec.clear_engine_cache()
+            t0 = time.perf_counter()
+            _, _, reports = quantize_blocks(blocks, recipe, x, engine=engine)
+            wall = time.perf_counter() - t0
+            out.append(common.row(f"recon/chain-L{n_blocks}/{engine}",
+                                  wall * 1e6,
+                                  derived(reports, wall, n_blocks)))
+
+
 ALL_TABLES = [table1_ablation, table2_weights_only, table3_w_a,
               table5_lm_w8a8, table7_llm_blockwise, fig3_grid_shifts,
-              bench_kernels, bench_serving, bench_decode]
+              bench_kernels, bench_serving, bench_decode, bench_recon]

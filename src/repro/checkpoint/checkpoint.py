@@ -147,10 +147,13 @@ class PTQCheckpointer:
         return os.path.join(self.dir, "ptq_state")
 
     def save(self, next_block: int, finalized, astates, reports, x_fp, x_q,
-             plans: Optional[list] = None):
+             plans: Optional[list] = None, engine: Optional[str] = None):
         """``plans``: per-finalized-block {site: SitePlan.summary()} dicts —
         recorded so a resume under different rules fails loudly instead of
-        silently mixing bit-widths."""
+        silently mixing bit-widths. ``engine`` records which reconstruction
+        engine produced the finalized blocks (informational: both engines
+        consume the identical RNG stream, so resuming under the other engine
+        is sound)."""
         tree = {
             "finalized": finalized,
             "astates": astates,
@@ -161,6 +164,7 @@ class PTQCheckpointer:
             "next_block": next_block,
             "reports": [dataclasses.asdict(r) for r in reports],
             "plans": plans or [],
+            "engine": engine,
         }
         save_pytree(self.path, tree, meta)
 
@@ -180,7 +184,11 @@ class PTQCheckpointer:
                     f"finalized under per-site plans {saved} but the current "
                     f"recipe resolves to {now}; restart with matching rules "
                     "or a fresh checkpoint dir")
-        reports = [BlockReport(**r) for r in meta["reports"]]
+        # tolerate report-schema drift across releases: unknown keys from a
+        # newer writer are dropped, missing keys fall back to field defaults
+        known = {f.name for f in dataclasses.fields(BlockReport)}
+        reports = [BlockReport(**{k: v for k, v in r.items() if k in known})
+                   for r in meta["reports"]]
         finalized = [jax.tree.map(jnp.asarray, f) for f in tree["finalized"]]
         astates = jax.tree.map(jnp.asarray, tree["astates"])
         return (meta["next_block"], finalized, astates, reports,

@@ -63,13 +63,30 @@ class QuantCtx:
     # Pallas interpret override; None resolves from the actual jax backend
     # (compiled on TPU, interpret elsewhere)
     interpret: Optional[bool] = None
+    # Pre-resolved per-site plans (the reconstruction engine passes these so a
+    # compiled step shared across blocks sees the right plan regardless of the
+    # site-name strings baked into the trace); names missing from the mapping
+    # fall back to recipe.resolve.
+    plans: Optional[Dict[str, SitePlan]] = None
+    # Per-site RNG salts as (traced) uint32 scalars. When set, QDrop keys are
+    # derived by folding the salt instead of a crc32 constant of the name —
+    # this keeps the compiled HLO identical across blocks while reproducing
+    # the exact per-real-site-name key stream.
+    site_salts: Optional[Dict[str, jax.Array]] = None
 
     # -------------------------------------------------------------- helpers
     def _plan(self, name: str, batch_dims: int = 0) -> Optional[SitePlan]:
         """Per-site plan (method + configs) from the recipe's rules."""
+        if self.plans is not None and name in self.plans:
+            return self.plans[name]
         if self.recipe is None:
             return None
         return self.recipe.resolve(name, batch_dims=batch_dims)
+
+    def _site_key(self, name: str) -> jax.Array:
+        if self.site_salts is not None and name in self.site_salts:
+            return jax.random.fold_in(self.key, self.site_salts[name])
+        return site_key(self.key, name)
 
     def _act(self, name: str, x: jax.Array) -> jax.Array:
         """Activation quantization before a linear (paper §4.3)."""
@@ -90,7 +107,7 @@ class QuantCtx:
         x_hat = lsq.apply(x, self.astates[name], plan.act)
         if (self.mode == "recon" and self.recipe.setting == "qdrop"
                 and self.drop_enabled and self.key is not None):
-            return qdrop.qdrop(x, x_hat, self.recipe.drop_prob, site_key(self.key, name))
+            return qdrop.qdrop(x, x_hat, self.recipe.drop_prob, self._site_key(name))
         return x_hat
 
     def _weight(self, name: str, w: Any, batch_dims: int) -> jax.Array:

@@ -182,6 +182,15 @@ class SitePlan:
                                 if self.act is not None else None),
                 "lr": self.lr}
 
+    def cache_key(self) -> Tuple:
+        """Hashable, site-name-independent summary of the resolved plan.
+
+        Two sites with equal cache keys quantize identically up to their
+        weight values, so the reconstruction engine may share one compiled
+        step between them (QuantConfig is frozen/hashable; the method is
+        identified by its registry name)."""
+        return (self.method.name, self.weight, self.act, self.lr)
+
 
 @dataclasses.dataclass(frozen=True)
 class QuantRecipe:

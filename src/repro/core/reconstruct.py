@@ -12,6 +12,31 @@ by already-quantized predecessors (the X̃ of Eq. ||WX - Ŵ X̃||). Activation
 quantizers (LSQ) are initialized from the student stream and co-trained with
 the rounding states (paper: LSQ technique for the activation step size).
 
+Execution model (the hot path — this loop runs iters × layers times):
+
+  scan engine (default)   The minibatch schedule (epoch keys + gather
+      indices) is precomputed on device once per block, then chunks of K
+      optimization steps run inside a single jitted ``jax.lax.scan`` —
+      Adam moments, rounding states, LSQ states and the PRNG stream are
+      threaded as the scan carry and loss/mse trajectories come back as
+      stacked outputs. One dispatch per K steps instead of one per step,
+      and no host-side gathers.
+
+  compiled-step cache     Blocks are canonicalized (site names rewritten to
+      position-based tokens, per-site QDrop salts passed as traced uint32
+      scalars, resolved SitePlans attached to the ctx) so the L identical
+      layers of a transformer hit one compiled step/teacher/student/
+      recon_error instead of L. Cache keys combine the block's ``apply_key``
+      (models stamp structurally identical layers with a shared token),
+      the canonicalized site plans (``SitePlan.cache_key``) and the recipe.
+      Carried states are de-aliased (constant-dedup can hand identical init
+      buffers to several sites) so ``donate_argnums`` is safe on the scan.
+
+  legacy engine           The original per-iteration Python loop (one
+      dispatch + two host gathers per step, one fresh jit per block), kept
+      for one release as the ``--legacy-loop`` escape hatch and as the
+      parity oracle for the scanned engine.
+
 Distribution: all jitted functions here are pjit-compatible — calibration
 tensors carry a leading sample axis that the caller shards over the data mesh
 axis; gradients reduce via the standard pjit psum. Per-block state is
@@ -20,8 +45,11 @@ boundary; see quantize_blocks(resume_dir=...).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 import time
+import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -32,6 +60,13 @@ from repro.core import paths as pth
 from repro.core.context import QuantCtx
 from repro.core.quant_config import QuantRecipe, SitePlan
 from repro.optim.adam import AdamConfig, adam_init, adam_update
+
+ENGINES = ("scan", "legacy")
+DEFAULT_CHUNK = 100  # scan steps fused into one jitted dispatch
+
+# Per-site lr rules ride adam_update's per-leaf lr_scale tree, so the base
+# config carries lr=1.0 and each leaf scales it by its plan's lr.
+_W_BASE_CFG = AdamConfig(lr=1.0)
 
 
 @dataclasses.dataclass
@@ -44,11 +79,22 @@ class Site:
 
 @dataclasses.dataclass
 class BlockHandle:
-    """A reconstruction unit: params + apply(params, x, ctx) -> y."""
+    """A reconstruction unit: params + apply(params, x, ctx) -> y.
+
+    ``apply_key``: optional hashable token identifying the *computation* of
+    ``apply`` independent of this block's parameter values and site-name
+    strings. Blocks that stamp the same token (e.g. the L identical layers a
+    model's ``quant_blocks`` emits in one call) share one compiled recon
+    step/teacher/student. The token must be fresh per ``quant_blocks`` call —
+    apply closures bake per-call constants (rope tables, encoder output) into
+    the trace. ``None`` disables sharing (the engine still caches per block
+    object).
+    """
     name: str
     params: Any
     apply: Callable[[Any, jax.Array, QuantCtx], jax.Array]
     sites: Dict[str, Site]
+    apply_key: Optional[Any] = None
 
 
 @dataclasses.dataclass
@@ -58,6 +104,48 @@ class BlockReport:
     err_after: float
     iters: int
     seconds: float
+    engine: str = "scan"
+    steps_per_s: float = 0.0
+
+
+# ------------------------------------------------------------- engine stats
+@dataclasses.dataclass
+class EngineStats:
+    """Trace/compile counters (incremented at jit trace time, so each count
+    is an actual XLA compilation, not a call)."""
+    step_compiles: int = 0
+    schedule_compiles: int = 0
+    teacher_compiles: int = 0
+    student_compiles: int = 0
+    recon_error_compiles: int = 0
+    engine_builds: int = 0
+    engine_hits: int = 0
+
+    @property
+    def compile_count(self) -> int:
+        return (self.step_compiles + self.schedule_compiles +
+                self.teacher_compiles + self.student_compiles +
+                self.recon_error_compiles)
+
+
+_STATS = EngineStats()
+
+
+def engine_stats() -> EngineStats:
+    return _STATS
+
+
+def reset_engine_stats() -> EngineStats:
+    """Zero the counters (benchmarks/tests). The compiled-step cache itself
+    is NOT cleared — pair with ``clear_engine_cache`` to measure cold."""
+    for f in dataclasses.fields(EngineStats):
+        setattr(_STATS, f.name, f.default)
+    return _STATS
+
+
+def clear_engine_cache() -> None:
+    _ENGINE_CACHE.clear()
+    _batch_schedule.clear_cache()
 
 
 def site_plans(block: BlockHandle, recipe: QuantRecipe) -> Dict[str, SitePlan]:
@@ -80,20 +168,22 @@ def init_astates(block: BlockHandle, recipe: QuantRecipe, x_q: jax.Array,
     """LSQ init from observed ranges on the student stream (eager pass).
 
     Per-site rules apply here too: a site whose plan has ``act is None``
-    (weight-only override) gets no LSQ state and stays fp.
+    (weight-only override) gets no LSQ state and stays fp. Plans are resolved
+    *first*: when every site of this block resolves to ``act is None`` the
+    calibration forward pass is skipped entirely.
     """
-    if recipe.a_bits is None and not any(
-            "a_bits" in dict(r.overrides) for r in recipe.rules):
-        return dict(prev or {})
+    states = dict(prev or {})
+    plans = site_plans(block, recipe)
+    if all(p.act is None for p in plans.values()):
+        return states
     ctx = QuantCtx(mode="calib", recipe=recipe)
     block.apply(block.params, x_q, ctx)
-    states = dict(prev or {})
     for name, (lo, hi) in ctx.records.items():
-        aq = recipe.resolve(name).act
-        if aq is None:
+        plan = plans.get(name) or recipe.resolve(name)
+        if plan.act is None:
             continue
         sample = jnp.asarray([lo, hi], jnp.float32)
-        states[name] = lsq.init(sample, aq)
+        states[name] = lsq.init(sample, plan.act)
     return states
 
 
@@ -107,30 +197,22 @@ def _apply_mask(grads, mask):
     return jax.tree.map(lambda g, m: g if m else jnp.zeros_like(g), grads, mask)
 
 
-def _w_opt_cfgs(plans: Dict[str, SitePlan]) -> Dict[str, AdamConfig]:
-    """One AdamConfig per site so rule-overridden learning rates apply."""
-    return {name: AdamConfig(lr=plan.lr) for name, plan in plans.items()}
+# ----------------------------------------------------------- step math
+def _make_step_fn(apply_fn: Callable, recipe: QuantRecipe,
+                  plans: Dict[str, SitePlan], a_opt_cfg: AdamConfig):
+    """Single optimization step, shared by both engines.
 
-
-def init_wopt(wstates: Dict[str, Any],
-              w_opt_cfgs: Dict[str, AdamConfig]) -> Dict[str, Any]:
-    return {k: adam_init(v, w_opt_cfgs[k]) for k, v in wstates.items()}
-
-
-def make_recon_step(block: BlockHandle, recipe: QuantRecipe,
-                    plans: Dict[str, SitePlan],
-                    w_opt_cfgs: Dict[str, AdamConfig], a_opt_cfg: AdamConfig):
-    """Builds the jitted (wstates, astates, opts, batch, step, key) -> ... fn.
-
-    Sites may carry heterogeneous plans (method, bits, lr): each site's
-    rounding state is updated by its own method + Adam config, all inside one
-    jitted step.
+    ``plans`` keys the same namespace as the state dicts (real site names for
+    the legacy loop, canonical tokens for the scanned engine). Sites may carry
+    heterogeneous plans (method, bits, lr): each site's rounding state is
+    updated by its own method, all inside one tree-wide Adam update whose
+    per-leaf lr_scale carries the rule-overridden learning rates.
     """
 
-    def loss_fn(wstates, astates, x_q, y_fp, step, key):
+    def loss_fn(params, wstates, astates, x_q, y_fp, step, key, salts):
         ctx = QuantCtx(mode="recon", recipe=recipe, wstates=wstates,
-                       astates=astates, key=key)
-        y = block.apply(block.params, x_q, ctx)
+                       astates=astates, key=key, plans=plans, site_salts=salts)
+        y = apply_fn(params, x_q, ctx)
         mse = jnp.mean(jnp.square(y.astype(jnp.float32) - y_fp.astype(jnp.float32)))
         reg = jnp.float32(0.0)
         for name, st in wstates.items():
@@ -138,28 +220,25 @@ def make_recon_step(block: BlockHandle, recipe: QuantRecipe,
             reg = reg + plan.method.loss_extra(st, plan.weight, step, recipe)
         return mse + reg, mse
 
-    def step_fn(wstates, astates, wopt, aopt, x_q, y_fp, step, key):
-        (loss, mse), (gw, ga) = jax.value_and_grad(loss_fn, argnums=(0, 1),
+    def step_fn(params, wstates, astates, wopt, aopt, x_q, y_fp, step, key,
+                salts):
+        (loss, mse), (gw, ga) = jax.value_and_grad(loss_fn, argnums=(1, 2),
                                                    has_aux=True)(
-            wstates, astates, x_q, y_fp, step, key)
+            params, wstates, astates, x_q, y_fp, step, key, salts)
         wmask, amask = _trainable_mask(wstates, astates, plans)
         gw = _apply_mask(gw, wmask)
-        new_w, new_wopt = {}, {}
-        for k in wstates:
-            st, op, _ = adam_update(gw[k], wopt[k], wstates[k], w_opt_cfgs[k])
-            new_w[k] = plans[k].method.project(st)
-            new_wopt[k] = op
-        wstates, wopt = new_w, new_wopt
+        w_lr = {k: jax.tree.map(lambda _: plans[k].lr, v)
+                for k, v in wstates.items()}
+        wstates, wopt, _ = adam_update(gw, wopt, wstates, _W_BASE_CFG,
+                                       lr_scale=w_lr)
+        wstates = {k: plans[k].method.project(v) for k, v in wstates.items()}
         if astates:
             ga = _apply_mask(ga, amask)
             astates, aopt, _ = adam_update(ga, aopt, astates, a_opt_cfg)
             astates = {k: lsq.project(v) for k, v in astates.items()}
         return wstates, astates, wopt, aopt, loss, mse
 
-    # NOTE: no donation — rounding states are small, and JAX constant-dedup
-    # can alias identical init buffers (e.g. zero points) across sites, which
-    # makes donation reject with "same buffer twice".
-    return jax.jit(step_fn)
+    return step_fn
 
 
 def recon_error(block: BlockHandle, recipe: QuantRecipe, wstates, astates,
@@ -170,40 +249,319 @@ def recon_error(block: BlockHandle, recipe: QuantRecipe, wstates, astates,
     return float(jnp.mean(jnp.square(y.astype(jnp.float32) - y_fp.astype(jnp.float32))))
 
 
-def reconstruct_block(block: BlockHandle, recipe: QuantRecipe, x_q: jax.Array,
-                      y_fp: jax.Array, key: jax.Array,
-                      astates: Optional[Dict[str, Any]] = None,
-                      ) -> Tuple[Dict[str, Any], Dict[str, Any], BlockReport]:
-    """Optimize rounding (+LSQ) states for one block. Returns final states."""
-    t0 = time.time()
-    plans = site_plans(block, recipe)
-    wstates = init_wstates(block, recipe)
-    astates = astates if astates is not None else init_astates(block, recipe, x_q)
-    err0 = recon_error(block, recipe, wstates, astates, x_q, y_fp)
+# ------------------------------------------------- canonicalization + cache
+class _RenameCtx:
+    """Ctx proxy translating model-side site names to canonical tokens.
 
-    w_opt_cfgs = _w_opt_cfgs(plans)
+    The model's apply closure bakes real site-name strings ("layers.3.wq");
+    translating them at the ctx boundary lets one compiled step serve every
+    structurally identical block: state dicts, plan lookups and QDrop salt
+    lookups all key on the canonical token. Names outside the mapping pass
+    through untouched (they hold no rounding/LSQ state here, so they stay fp).
+    """
+    __slots__ = ("_ctx", "_map")
+
+    def __init__(self, ctx: QuantCtx, mapping: Dict[str, str]):
+        self._ctx = ctx
+        self._map = mapping
+
+    def linear(self, name, *args, **kwargs):
+        return self._ctx.linear(self._map.get(name, name), *args, **kwargs)
+
+    def conv2d(self, name, *args, **kwargs):
+        return self._ctx.conv2d(self._map.get(name, name), *args, **kwargs)
+
+    def get_weight(self, name, *args, **kwargs):
+        return self._ctx.get_weight(self._map.get(name, name), *args, **kwargs)
+
+    def __getattr__(self, item):
+        return getattr(self._ctx, item)
+
+
+def _canon_names(block: BlockHandle) -> Dict[str, str]:
+    """real site name -> position-based canonical token (sorted order, so
+    structurally identical blocks map corresponding sites to the same
+    token)."""
+    return {rn: f"~s{i}" for i, rn in enumerate(sorted(block.sites))}
+
+
+def _salt(name: str) -> jax.Array:
+    # must match context.site_key's crc32 constant so scanned and legacy
+    # engines consume the identical QDrop key stream
+    return jnp.uint32(zlib.crc32(name.encode()) & 0x7FFFFFFF)
+
+
+@dataclasses.dataclass
+class _Engine:
+    """Compiled callables for one equivalence class of blocks. Holds a strong
+    ref to the exemplar apply fn so id()-keyed cache entries stay valid."""
+    apply: Callable
+    run_chunk: Callable
+    teacher: Callable
+    student: Callable
+    recon_err: Callable
+
+
+_ENGINE_CACHE: "collections.OrderedDict[Any, _Engine]" = collections.OrderedDict()
+_ENGINE_CACHE_MAX = 64
+# Engines built inside a quantize_blocks call are evicted when it returns:
+# apply_key tokens are fresh per quant_blocks call, so those entries can
+# never hit again, yet their closures pin per-call constants (rope tables,
+# encoder outputs, the model itself). Entries from direct reconstruct_block
+# use stay in the bounded LRU.
+_SCOPE_STACK: List[set] = []
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def _batch_schedule(key, iters: int, n: int, bs: int):
+    """Epoch key/minibatch-index schedule, built on device in one dispatch.
+
+    Replays the legacy loop's RNG exactly: per step ``key, k1, k2 =
+    split(key, 3)``, gather indices drawn with ``choice(k1, n, (bs,),
+    replace=False)``. Full-batch recon (bs == n) skips the gather tensor
+    entirely — the engine reuses x_q/y_fp as-is.
+    """
+    _STATS.schedule_compiles += 1
+
+    def split3(k, _):
+        k, k1, k2 = jax.random.split(k, 3)
+        return k, (k1, k2)
+
+    _, (k1s, k2s) = jax.lax.scan(split3, key, None, length=iters)
+    if bs == n:
+        return None, k2s
+    idx = jax.vmap(
+        lambda k: jax.random.choice(k, n, (bs,), replace=False))(k1s)
+    return idx, k2s
+
+
+def _engine_key(block: BlockHandle, recipe: QuantRecipe,
+                plans: Dict[str, SitePlan], canon: Dict[str, str]):
+    akey = (block.apply_key if block.apply_key is not None
+            else ("~obj", id(block.apply)))
+    sites = tuple(sorted(
+        (canon[rn], s.kind, s.batch_dims, plans[rn].cache_key())
+        for rn, s in block.sites.items()))
+    return (akey, sites, recipe)
+
+
+def _build_engine(block: BlockHandle, recipe: QuantRecipe,
+                  plans_c: Dict[str, SitePlan],
+                  mapping: Dict[str, str]) -> _Engine:
+    block_apply = block.apply
+
+    def apply_c(p, x, ctx):
+        return block_apply(p, x, _RenameCtx(ctx, mapping))
+
     a_opt_cfg = AdamConfig(lr=recipe.lr_lsq)
-    wopt = init_wopt(wstates, w_opt_cfgs)
+    step = _make_step_fn(apply_c, recipe, plans_c, a_opt_cfg)
+
+    def run_chunk(params, wstates, astates, wopt, aopt, x_q, y_fp,
+                  idx, k2s, steps, salts):
+        _STATS.step_compiles += 1
+
+        def body(carry, xs):
+            ws, as_, wo, ao = carry
+            if idx is None:
+                k2, stp = xs
+                xb, yb = x_q, y_fp
+            else:
+                ix, k2, stp = xs
+                xb = jnp.take(x_q, ix, axis=0)
+                yb = jnp.take(y_fp, ix, axis=0)
+            ws, as_, wo, ao, loss, mse = step(params, ws, as_, wo, ao,
+                                              xb, yb, stp, k2, salts)
+            return (ws, as_, wo, ao), (loss, mse)
+
+        xs = (k2s, steps) if idx is None else (idx, k2s, steps)
+        carry, traj = jax.lax.scan(body, (wstates, astates, wopt, aopt), xs)
+        return (*carry, *traj)
+
+    def teacher(params, x):
+        _STATS.teacher_compiles += 1
+        return apply_c(params, x, QuantCtx(mode="fp"))
+
+    def student(params, x, astates):
+        _STATS.student_compiles += 1
+        ctx = QuantCtx(mode="deploy", recipe=recipe, astates=astates,
+                       plans=plans_c)
+        return apply_c(params, x, ctx)
+
+    def recon_err(params, wstates, astates, x_q, y_fp):
+        _STATS.recon_error_compiles += 1
+        ctx = QuantCtx(mode="recon", recipe=recipe, wstates=wstates,
+                       astates=astates, key=jax.random.key(recipe.seed),
+                       drop_enabled=False, plans=plans_c)
+        y = apply_c(params, x_q, ctx)
+        return jnp.mean(jnp.square(y.astype(jnp.float32) -
+                                   y_fp.astype(jnp.float32)))
+
+    # Carried states are de-aliased before the first chunk, so donation is
+    # safe (the old "same buffer twice" rejection came from constant-dedup
+    # aliasing identical init buffers across sites).
+    return _Engine(
+        apply=block_apply,
+        run_chunk=jax.jit(run_chunk, donate_argnums=(1, 2, 3, 4)),
+        teacher=jax.jit(teacher),
+        student=jax.jit(student),
+        recon_err=jax.jit(recon_err),
+    )
+
+
+def _get_engine(block: BlockHandle, recipe: QuantRecipe,
+                plans: Dict[str, SitePlan]) -> Tuple[_Engine, Dict[str, str]]:
+    canon = _canon_names(block)
+    key = _engine_key(block, recipe, plans, canon)
+    eng = _ENGINE_CACHE.get(key)
+    if eng is not None:
+        _STATS.engine_hits += 1
+        _ENGINE_CACHE.move_to_end(key)
+        return eng, canon
+    eng = _build_engine(block, recipe,
+                        {canon[rn]: plans[rn] for rn in block.sites}, canon)
+    _STATS.engine_builds += 1
+    _ENGINE_CACHE[key] = eng
+    if _SCOPE_STACK:
+        _SCOPE_STACK[-1].add(key)
+    while len(_ENGINE_CACHE) > _ENGINE_CACHE_MAX:
+        _ENGINE_CACHE.popitem(last=False)
+    return eng, canon
+
+
+def _dealias(*trees):
+    """Copy every leaf into its own freshly materialized buffer. JAX
+    constant-dedup can hand several sites the same underlying buffer for
+    identical init arrays (e.g. all-zero zero points); XLA rejects donating
+    one buffer twice, so the carried states get unique storage before
+    entering the donated scan."""
+    return tuple(jax.tree.map(lambda x: jnp.array(x, copy=True), t)
+                 for t in trees)
+
+
+# ----------------------------------------------------------------- engines
+def _run_scan(block: BlockHandle, recipe: QuantRecipe,
+              plans: Dict[str, SitePlan], wstates, astates_all, x_q, y_fp,
+              key, chunk: int):
+    """Scan-fused engine: returns (wstates, astates_all, err0, err1,
+    loop_seconds, loss_curve, mse_curve)."""
+    eng, canon = _get_engine(block, recipe, plans)
+    inv = {c: r for r, c in canon.items()}
+    c_w = {canon[r]: v for r, v in wstates.items()}
+    c_a = {canon[r]: astates_all[r] for r in block.sites if r in astates_all}
+    salts = {canon[r]: _salt(r) for r in block.sites}
+
+    err0 = float(eng.recon_err(block.params, c_w, c_a, x_q, y_fp))
+
+    a_opt_cfg = AdamConfig(lr=recipe.lr_lsq)
+    wopt = adam_init(c_w, _W_BASE_CFG)
+    aopt = adam_init(c_a, a_opt_cfg)
+    c_w, c_a, wopt, aopt = _dealias(c_w, c_a, wopt, aopt)
+
+    n = x_q.shape[0]
+    bs = min(recipe.batch_size, n)
+    t0 = time.time()
+    idx, k2s = _batch_schedule(key, recipe.iters, n, bs)
+    steps = jnp.arange(recipe.iters, dtype=jnp.int32)
+    chunk = max(1, min(chunk, recipe.iters))
+    losses, mses = [], []
+    it = 0
+    while it < recipe.iters:
+        sl = slice(it, it + min(chunk, recipe.iters - it))
+        c_w, c_a, wopt, aopt, lo, ms = eng.run_chunk(
+            block.params, c_w, c_a, wopt, aopt, x_q, y_fp,
+            None if idx is None else idx[sl], k2s[sl], steps[sl], salts)
+        losses.append(lo)
+        mses.append(ms)
+        it = sl.stop
+    if mses:
+        jax.block_until_ready(mses[-1])
+    loop_s = time.time() - t0
+
+    err1 = float(eng.recon_err(block.params, c_w, c_a, x_q, y_fp))
+    w_out = {inv[c]: v for c, v in c_w.items()}
+    a_out = dict(astates_all)
+    a_out.update({inv[c]: v for c, v in c_a.items()})
+    return (w_out, a_out, err0, err1, loop_s,
+            jnp.concatenate(losses) if losses else jnp.zeros((0,)),
+            jnp.concatenate(mses) if mses else jnp.zeros((0,)))
+
+
+def _run_legacy(block: BlockHandle, recipe: QuantRecipe,
+                plans: Dict[str, SitePlan], wstates, astates, x_q, y_fp, key):
+    """Seed-style per-iteration Python loop (escape hatch, parity oracle)."""
+    err0 = recon_error(block, recipe, wstates, astates, x_q, y_fp)
+    a_opt_cfg = AdamConfig(lr=recipe.lr_lsq)
+    wopt = adam_init(wstates, _W_BASE_CFG)
     aopt = adam_init(astates, a_opt_cfg)
-    step_fn = make_recon_step(block, recipe, plans, w_opt_cfgs, a_opt_cfg)
+    step_raw = _make_step_fn(block.apply, recipe, plans, a_opt_cfg)
+
+    def counted_step(*args):
+        _STATS.step_compiles += 1
+        return step_raw(*args)
+
+    step_fn = jax.jit(counted_step)
 
     n = x_q.shape[0]
     bs = min(recipe.batch_size, n)
 
     @jax.jit
-    def sample(key):
-        return jax.random.choice(key, n, (bs,), replace=False)
+    def sample(k):
+        return jax.random.choice(k, n, (bs,), replace=False)
 
+    t0 = time.time()
+    losses, mses = [], []
     for it in range(recipe.iters):
         key, k1, k2 = jax.random.split(key, 3)
-        idx = sample(k1)
-        xb = jnp.take(x_q, idx, axis=0)
-        yb = jnp.take(y_fp, idx, axis=0)
+        if bs == n:  # full-batch recon: no gather needed
+            xb, yb = x_q, y_fp
+        else:
+            i = sample(k1)
+            xb = jnp.take(x_q, i, axis=0)
+            yb = jnp.take(y_fp, i, axis=0)
         wstates, astates, wopt, aopt, loss, mse = step_fn(
-            wstates, astates, wopt, aopt, xb, yb, jnp.int32(it), k2)
-
+            block.params, wstates, astates, wopt, aopt, xb, yb,
+            jnp.int32(it), k2, None)
+        losses.append(loss)
+        mses.append(mse)
+    if mses:
+        jax.block_until_ready(mses[-1])
+    loop_s = time.time() - t0
     err1 = recon_error(block, recipe, wstates, astates, x_q, y_fp)
-    rep = BlockReport(block.name, err0, err1, recipe.iters, time.time() - t0)
+    return (wstates, astates, err0, err1, loop_s,
+            jnp.stack(losses) if losses else jnp.zeros((0,)),
+            jnp.stack(mses) if mses else jnp.zeros((0,)))
+
+
+def reconstruct_block(block: BlockHandle, recipe: QuantRecipe, x_q: jax.Array,
+                      y_fp: jax.Array, key: jax.Array,
+                      astates: Optional[Dict[str, Any]] = None, *,
+                      engine: str = "scan", chunk: int = DEFAULT_CHUNK,
+                      ) -> Tuple[Dict[str, Any], Dict[str, Any], BlockReport]:
+    """Optimize rounding (+LSQ) states for one block. Returns final states.
+
+    ``engine="scan"`` (default) runs the fused, compile-cached device loop;
+    ``engine="legacy"`` the per-iteration Python loop. Both consume the same
+    RNG stream and produce allclose trajectories. The report carries the
+    measured loop throughput (``steps_per_s``) and the loss/mse trajectories
+    (``rep.loss_curve`` / ``rep.mse_curve``, stacked device arrays).
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"engine {engine!r} not in {ENGINES}")
+    t0 = time.time()
+    plans = site_plans(block, recipe)
+    wstates = init_wstates(block, recipe)
+    astates = astates if astates is not None else init_astates(block, recipe, x_q)
+
+    run = _run_scan if engine == "scan" else _run_legacy
+    extra = (chunk,) if engine == "scan" else ()
+    wstates, astates, err0, err1, loop_s, loss_curve, mse_curve = run(
+        block, recipe, plans, wstates, astates, x_q, y_fp, key, *extra)
+
+    rep = BlockReport(block.name, err0, err1, recipe.iters,
+                      time.time() - t0, engine=engine,
+                      steps_per_s=recipe.iters / max(loop_s, 1e-9))
+    rep.loss_curve = loss_curve
+    rep.mse_curve = mse_curve
     return wstates, astates, rep
 
 
@@ -226,11 +584,15 @@ def finalize_block(block: BlockHandle, recipe: QuantRecipe, wstates,
 
 # --------------------------------------------------------------------- driver
 def _teacher_fn(block: BlockHandle):
-    return jax.jit(lambda p, x: block.apply(p, x, QuantCtx(mode="fp")))
+    def f(p, x):
+        _STATS.teacher_compiles += 1
+        return block.apply(p, x, QuantCtx(mode="fp"))
+    return jax.jit(f)
 
 
 def _student_fn(block: BlockHandle, recipe: QuantRecipe):
     def f(p, x, astates):
+        _STATS.student_compiles += 1
         ctx = QuantCtx(mode="deploy", recipe=recipe, astates=astates)
         return block.apply(p, x, ctx)
     return jax.jit(f)
@@ -240,11 +602,12 @@ def _explode_layerwise(block: BlockHandle, recipe: QuantRecipe, x_q):
     """Yield per-site sub-blocks for recon='layer' (AdaRound-style).
 
     Each site becomes a standalone linear/conv reconstruction problem whose
-    inputs are captured from the (partially quantized) block execution.
+    inputs are captured from the block execution — one capture pass records
+    every site's input, reused for all yielded sub-blocks.
     """
+    ctx_q = QuantCtx(mode="capture", recipe=recipe)
+    block.apply(block.params, x_q, ctx_q)
     for name, site in block.sites.items():
-        ctx_q = QuantCtx(mode="capture", recipe=recipe)
-        block.apply(block.params, x_q, ctx_q)
         x_site = ctx_q.records[name][0]
         w = pth.get_path(block.params, site.path)
 
@@ -261,7 +624,8 @@ def _explode_layerwise(block: BlockHandle, recipe: QuantRecipe, x_q):
         sub = BlockHandle(name=f"{block.name}/{name}", params={"w": w},
                           apply=apply_fn,
                           sites={name: Site(path=("w",), kind=site.kind,
-                                            batch_dims=site.batch_dims)})
+                                            batch_dims=site.batch_dims)},
+                          apply_key=("~layerwise", site.kind, site.batch_dims))
         yield name, site, sub, x_site
 
 
@@ -269,14 +633,32 @@ def quantize_blocks(blocks: List[BlockHandle], recipe: QuantRecipe,
                     x0: jax.Array, key: Optional[jax.Array] = None,
                     as_qtensor: bool = True,
                     checkpoint_dir: Optional[str] = None,
-                    progress: Optional[Callable[[str], None]] = None,
+                    progress: Optional[Callable[[str], None]] = None, *,
+                    engine: str = "scan", chunk: int = DEFAULT_CHUNK,
                     ) -> Tuple[List[Any], Dict[str, Any], List[BlockReport]]:
     """Sequentially quantize a chain of blocks (the paper's full procedure).
 
     Returns (per-block finalized params, astates, reports). If
     ``checkpoint_dir`` is set, per-block state is saved after each block and
-    a crashed run resumes at the first un-finalized block.
+    a crashed run resumes at the first un-finalized block. With the default
+    scanned engine the teacher/student/recon-step compilations are shared
+    across structurally identical blocks (see ``BlockHandle.apply_key``).
     """
+    if engine not in ENGINES:
+        raise ValueError(f"engine {engine!r} not in {ENGINES}")
+    _SCOPE_STACK.append(set())
+    try:
+        return _quantize_blocks(blocks, recipe, x0, key, as_qtensor,
+                                checkpoint_dir, progress, engine, chunk)
+    finally:
+        # release this call's engines: their apply closures pin per-call
+        # constants and their apply_key tokens can never hit again
+        for k in _SCOPE_STACK.pop():
+            _ENGINE_CACHE.pop(k, None)
+
+
+def _quantize_blocks(blocks, recipe, x0, key, as_qtensor, checkpoint_dir,
+                     progress, engine, chunk):
     key = key if key is not None else jax.random.key(recipe.seed)
     ckpt = None
     if checkpoint_dir is not None:
@@ -295,13 +677,23 @@ def quantize_blocks(blocks: List[BlockHandle], recipe: QuantRecipe,
         if resumed is not None:
             start, finalized, astates, reports, x_fp, x_q = resumed
 
+    def advance_student(block, eng, canon, params, x):
+        if eng is not None:
+            a_c = {canon[r]: astates[r] for r in block.sites if r in astates}
+            return eng.student(params, x, a_c)
+        return _student_fn(block, recipe)(params, x, astates)
+
     for i in range(len(blocks)):
         block = blocks[i]
-        teacher = _teacher_fn(block)
-        y_fp = teacher(block.params, x_fp)
+        eng = canon = None
+        if engine == "scan":
+            eng, canon = _get_engine(block, recipe, site_plans(block, recipe))
+            y_fp = eng.teacher(block.params, x_fp)
+        else:
+            y_fp = _teacher_fn(block)(block.params, x_fp)
         if i < start:
             # replay streams from checkpointed finalized params
-            x_q = _student_fn(block, recipe)(finalized[i], x_q, astates)
+            x_q = advance_student(block, eng, canon, finalized[i], x_q)
             x_fp = y_fp
             continue
         key, bkey = jax.random.split(key)
@@ -309,29 +701,31 @@ def quantize_blocks(blocks: List[BlockHandle], recipe: QuantRecipe,
 
         if recipe.recon == "layer":
             wstates_all: Dict[str, Any] = {}
-            params_cur = block.params
-            cur = BlockHandle(block.name, params_cur, block.apply, block.sites)
-            for name, site, sub, x_site in _explode_layerwise(cur, recipe, x_q):
-                y_site = _teacher_fn(sub)(sub.params, x_site)
+            for name, site, sub, x_site in _explode_layerwise(block, recipe,
+                                                              x_q):
+                if engine == "scan":
+                    sub_eng, _ = _get_engine(sub, recipe,
+                                             site_plans(sub, recipe))
+                    y_site = sub_eng.teacher(sub.params, x_site)
+                else:
+                    y_site = _teacher_fn(sub)(sub.params, x_site)
                 ws, a_sub, rep = reconstruct_block(sub, recipe, x_site, y_site,
-                                                   bkey, astates=dict(astates))
+                                                   bkey, astates=dict(astates),
+                                                   engine=engine, chunk=chunk)
                 astates.update(a_sub)
                 wstates_all[name] = ws[name]
                 reports.append(rep)
-                params_cur = pth.set_path(
-                    params_cur, site.path,
-                    pth.get_path(finalize_block(sub, recipe, ws,
-                                                as_qtensor=False), ("w",)))
-                cur = BlockHandle(block.name, params_cur, block.apply, block.sites)
             wstates = wstates_all
         else:
             wstates, astates, rep = reconstruct_block(block, recipe, x_q, y_fp,
-                                                      bkey, astates=astates)
+                                                      bkey, astates=astates,
+                                                      engine=engine,
+                                                      chunk=chunk)
             reports.append(rep)
 
         new_params = finalize_block(block, recipe, wstates, as_qtensor=as_qtensor)
         finalized.append(new_params)
-        x_q = _student_fn(block, recipe)(new_params, x_q, astates)
+        x_q = advance_student(block, eng, canon, new_params, x_q)
         x_fp = y_fp
         if progress:
             progress(f"[{i + 1}/{len(blocks)}] {block.name} "
@@ -341,6 +735,6 @@ def quantize_blocks(blocks: List[BlockHandle], recipe: QuantRecipe,
                           for n, p in site_plans(b, recipe).items()}
                          for b in blocks[:i + 1]]
             ckpt.save(i + 1, finalized, astates, reports, x_fp, x_q,
-                      plans=plan_meta)
+                      plans=plan_meta, engine=engine)
 
     return finalized, astates, reports

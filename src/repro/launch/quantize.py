@@ -25,7 +25,9 @@ import jax
 from repro.checkpoint import CheckpointManager, save_pytree
 from repro.configs import get_config, get_smoke_config
 from repro.core import QuantRecipe, method_api
-from repro.core.reconstruct import quantize_blocks, site_plans
+from repro.core.reconstruct import (DEFAULT_CHUNK, engine_stats,
+                                    quantize_blocks, reset_engine_stats,
+                                    site_plans)
 from repro.data import CalibrationSet, SyntheticTokens
 from repro.models import build_model
 
@@ -63,6 +65,13 @@ def main():
                     help="after quantization, run a short deploy-mode decode "
                          "through the kernel serving path and report "
                          "us/step + weight bytes moved")
+    ap.add_argument("--legacy-loop", action="store_true",
+                    help="run reconstruction through the per-iteration "
+                         "Python loop instead of the scan-fused compile-"
+                         "cached engine (escape hatch, kept for one release)")
+    ap.add_argument("--scan-chunk", type=int, default=DEFAULT_CHUNK,
+                    help="optimization steps fused per device dispatch in "
+                         "the scanned engine")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -91,10 +100,28 @@ def main():
         print(f"rules override {len(overridden)} site(s):")
         for n, s in overridden:
             print(f"  {n}: {s}")
+    engine = "legacy" if args.legacy_loop else "scan"
+    reset_engine_stats()
     finalized, astates, reports = quantize_blocks(
         blocks, recipe, x0, checkpoint_dir=args.resume_dir,
-        progress=lambda s: print(s, flush=True))
+        progress=lambda s: print(s, flush=True),
+        engine=engine, chunk=args.scan_chunk)
     qparams = assemble(finalized)
+
+    stats = engine_stats()
+    # blocks replayed from a resume checkpoint carry no loop timing
+    # (steps_per_s=0.0): only count units reconstructed by this process
+    ran = [r for r in reports if r.steps_per_s > 0]
+    steps = sum(r.iters for r in ran)
+    loop_s = sum(r.iters / r.steps_per_s for r in ran)
+    print(f"recon[{engine}]: {steps} steps over {len(ran)} unit(s) in "
+          f"{loop_s:.2f}s ({steps / max(loop_s, 1e-9):.1f} steps/s); "
+          f"compiles: step={stats.step_compiles} "
+          f"teacher={stats.teacher_compiles} "
+          f"student={stats.student_compiles} "
+          f"recon_err={stats.recon_error_compiles} "
+          f"schedule={stats.schedule_compiles} "
+          f"(total {stats.compile_count})", flush=True)
 
     out = args.out or f"/tmp/quantized_{cfg.name}_{args.method}"
     save_pytree(out, {"params": qparams, "astates": astates},

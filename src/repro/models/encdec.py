@@ -254,6 +254,8 @@ class EncDecLM:
                             cfg.d_model).astype(x0.dtype)[None]
         a_names = ["wq", "wk", "wv", "wo"]
         blocks = []
+        # fresh per call: the decoder apply closures bake this call's enc_out
+        call_token = object()
         for i in range(cfg.n_layers):
             p_l = jax.tree.map(lambda a: a[i], params["dec_layers"])
             name = f"layers.{i}"  # canonical "layers.<i>.<site>" naming
@@ -267,7 +269,8 @@ class EncDecLM:
             def apply_fn(p, x, ctx, _n=name):
                 return self._dec_layer(p, x, enc_out, ctx, _n)
 
-            blocks.append(BlockHandle(name, p_l, apply_fn, sites))
+            blocks.append(BlockHandle(name, p_l, apply_fn, sites,
+                                      apply_key=(call_token,)))
 
         def assemble(finalized):
             out = dict(params)

@@ -355,6 +355,7 @@ class GriffinLM:
         mlp_names = ["w_up", "w_down"] + (
             ["w_gate"] if cfg.act in ("swiglu", "geglu") else [])
         blocks = []
+        call_token = object()  # compiled recon steps shared per layer kind
         for i, p_l in enumerate(params["layers"]):
             name = f"layers.{i}"
             sites = {f"{name}.mlp.{n}": Site(("ffn", "mlp", n))
@@ -372,7 +373,8 @@ class GriffinLM:
                 y, _ = self._layer(_i, p, x, ctx, sin, cos)
                 return y
 
-            blocks.append(BlockHandle(name, p_l, apply_fn, sites))
+            blocks.append(BlockHandle(name, p_l, apply_fn, sites,
+                                      apply_key=(call_token, self.kinds[i])))
 
         def assemble(finalized):
             out = dict(params)

@@ -268,6 +268,7 @@ class MambaLM:
         blocks = []
         sites = {"layers.in_proj": Site(("in_proj",)),
                  "layers.out_proj": Site(("out_proj",))}
+        call_token = object()  # share compiled recon steps across layers
         for i in range(cfg.n_layers):
             p_l = jax.tree.map(lambda a: a[i], params["layers"])
             bname = f"layers.{i}"  # canonical "layers.<i>.<site>" naming
@@ -277,7 +278,8 @@ class MambaLM:
                 y, _ = layer_forward(p, x, cfg, ctx, _bn)
                 return y
 
-            blocks.append(BlockHandle(bname, p_l, apply_fn, bsites))
+            blocks.append(BlockHandle(bname, p_l, apply_fn, bsites,
+                                      apply_key=(call_token,)))
 
         def assemble(finalized):
             out = dict(params)

@@ -443,6 +443,9 @@ class TransformerLM:
         blocks = []
         segs = self._all_layers(params)
         gi = 0  # global layer index across segments -> stable site names
+        # fresh per call: apply closures bake this call's rope tables, so the
+        # compiled-step share group must not leak across quant_blocks calls
+        call_token = object()
         for seg_i, (stack, kind, n) in enumerate(segs):
             for i in range(n):
                 p_l = jax.tree.map(lambda a: a[i], stack)
@@ -461,7 +464,8 @@ class TransformerLM:
                     return y
 
                 blocks.append(BlockHandle(name=bname, params=p_l,
-                                          apply=apply_fn, sites=sites))
+                                          apply=apply_fn, sites=sites,
+                                          apply_key=(call_token, kind)))
 
         def assemble(finalized):
             out = dict(params)

@@ -84,8 +84,15 @@ def global_norm(tree: Any) -> jax.Array:
 
 
 def adam_update(grads: Any, state: Any, params: Any, cfg: AdamConfig,
-                lr_scale: jax.Array | float = 1.0) -> Tuple[Any, Any, jax.Array]:
-    """Returns (new_params, new_state, grad_norm)."""
+                lr_scale: Any = 1.0) -> Tuple[Any, Any, jax.Array]:
+    """Returns (new_params, new_state, grad_norm).
+
+    ``lr_scale`` is either a scalar (python number or traced array) applied
+    uniformly, or a pytree matching ``params`` whose leaves scale ``cfg.lr``
+    per leaf. The pytree form lets heterogeneous learning rates (e.g. the PTQ
+    engine's per-site lr rules) ride one tree-wide update instead of a Python
+    loop of per-group calls.
+    """
     count = state["count"] + 1
     gnorm = global_norm(grads)
     if cfg.grad_clip is not None:
@@ -94,9 +101,9 @@ def adam_update(grads: Any, state: Any, params: Any, cfg: AdamConfig,
 
     c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
     c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
-    lr = cfg.lr * lr_scale
 
-    def one(g, p, mu):
+    def one(g, p, mu, scale):
+        lr = cfg.lr * scale
         g32 = g.astype(jnp.float32)
         m = _decode_moment(mu["m"], cfg.moment_dtype, p.shape)
         v = _decode_moment(mu["v"], cfg.moment_dtype, p.shape, second=True)
@@ -113,7 +120,12 @@ def adam_update(grads: Any, state: Any, params: Any, cfg: AdamConfig,
     flat_p, treedef = jax.tree.flatten(params)
     flat_g = treedef.flatten_up_to(grads)
     flat_mu = treedef.flatten_up_to(state["mu"])
-    out = [one(g, p, mu) for g, p, mu in zip(flat_g, flat_p, flat_mu)]
+    if isinstance(lr_scale, (int, float, jax.Array)):
+        flat_s = [lr_scale] * len(flat_p)
+    else:
+        flat_s = treedef.flatten_up_to(lr_scale)
+    out = [one(g, p, mu, s)
+           for g, p, mu, s in zip(flat_g, flat_p, flat_mu, flat_s)]
     new_params = treedef.unflatten([o[0] for o in out])
     new_mu = treedef.unflatten([o[1] for o in out])
     return new_params, {"mu": new_mu, "count": count}, gnorm
