@@ -81,13 +81,13 @@ def eval_ppl(model, params, n_batches: int = 8, ctx: Optional[QuantCtx] = None,
 
 
 def ptq(model, params, recipe: QuantRecipe, n_calib: int = 64,
-        as_qtensor: bool = False, engine: str = "scan"):
+        as_qtensor: bool = False):
     """Full PTQ of the bench LM; returns (quantized params, astates, reports)."""
     src = SyntheticTokens(vocab=BENCH_CFG.vocab, seq_len=SEQ, seed=0)
     cal = CalibrationSet.build(src, n_calib)
     x0, blocks, assemble = model.quant_blocks(params, cal.tokens)
     finalized, astates, reports = quantize_blocks(
-        blocks, recipe, x0, as_qtensor=as_qtensor, engine=engine)
+        blocks, recipe, x0, as_qtensor=as_qtensor)
     return assemble(finalized), astates, reports
 
 

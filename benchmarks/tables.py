@@ -247,26 +247,23 @@ def bench_decode(out: List[str]):
 def bench_recon(out: List[str]):
     """Reconstruction-throughput benchmark (the PTQ hot path itself).
 
-    Two model scales, both engines each:
+    Two model scales on the scan-fused engine (the legacy per-step loop is
+    gone; its trajectories are pinned as fixtures in tests):
 
-      recon/{w4,mixed}/*   the smoke LM (compute-bound on the CPU runner —
-                           the fusion win shows mostly in compile_count and
-                           the removed per-step dispatch; TPU wall-clock
-                           trajectories come from compiled runs)
-      recon/chain-L{2,6}/* identical-structure MLP chains, the dispatch-bound
-                           regime where the scanned engine's >=5x steps_per_s
-                           over the legacy loop is visible on CPU, and where
-                           compile_count must stay flat (L2 vs L6) while the
-                           legacy loop's grows with the block count
+      recon/{w4,mixed}/scan   the smoke LM (compute-bound on the CPU runner;
+                              TPU wall-clock trajectories come from compiled
+                              runs)
+      recon/chain-L{2,6}/scan identical-structure MLP chains, the dispatch-
+                              bound regime: compile_count must stay flat
+                              from L2 to L6 (the compile-once cache)
 
     derived columns:
       steps_per_s      median per-block loop throughput (steady state; the
-                       scanned engine's one-time compile lands in the first
-                       block, legacy recompiles every block)
+                       one-time compile lands in the first block)
       agg_steps_per_s  total optimization steps / total loop seconds,
                        compile included (what a single PTQ run experiences)
       compile_count    actual XLA trace count across step/teacher/student/
-                       recon_error/schedule
+                       recon_error/schedule/probe
       sec_per_block    wall-clock of the full PTQ divided by block count
     """
     import statistics
@@ -294,33 +291,104 @@ def bench_recon(out: List[str]):
                                     "layers.3.*:w_bits=8,a_bits=none")),
     }
     for tag, recipe in recipes.items():
-        for engine in ("scan", "legacy"):
-            rec.reset_engine_stats()
-            rec.clear_engine_cache()
-            t0 = time.perf_counter()
-            _, _, reports = common.ptq(model, params, recipe, engine=engine)
-            wall = time.perf_counter() - t0
-            out.append(common.row(f"recon/{tag}/{engine}", wall * 1e6,
-                                  derived(reports, wall, len(reports))))
+        rec.reset_engine_stats()
+        rec.clear_engine_cache()
+        t0 = time.perf_counter()
+        _, _, reports = common.ptq(model, params, recipe)
+        wall = time.perf_counter() - t0
+        out.append(common.row(f"recon/{tag}/scan", wall * 1e6,
+                              derived(reports, wall, len(reports))))
 
-    # dispatch-bound multi-block chains: >=5x steps_per_s and flat
-    # compile_count for the scanned engine
+    # dispatch-bound multi-block chains: compile_count flat L2 vs L6
     x = jax.random.normal(jax.random.key(11), (64, 32), jnp.float32)
     recipe = QuantRecipe(method="flexround", w_bits=4, w_symmetric=True,
                          a_bits=8, iters=100, lr=3e-3, batch_size=16)
     for n_blocks in (2, 6):
         blocks = common.make_block_chain(n_blocks)
-        for engine in ("scan", "legacy"):
-            rec.reset_engine_stats()
-            rec.clear_engine_cache()
-            t0 = time.perf_counter()
-            _, _, reports = quantize_blocks(blocks, recipe, x, engine=engine)
-            wall = time.perf_counter() - t0
-            out.append(common.row(f"recon/chain-L{n_blocks}/{engine}",
-                                  wall * 1e6,
-                                  derived(reports, wall, n_blocks)))
+        rec.reset_engine_stats()
+        rec.clear_engine_cache()
+        t0 = time.perf_counter()
+        _, _, reports = quantize_blocks(blocks, recipe, x)
+        wall = time.perf_counter() - t0
+        out.append(common.row(f"recon/chain-L{n_blocks}/scan", wall * 1e6,
+                              derived(reports, wall, n_blocks)))
+
+
+def bench_alloc(out: List[str]):
+    """Automatic bit-allocation benchmark (repro.allocate).
+
+    Rows:
+      alloc/probe              probe-pass cost on the smoke LM:
+                               probe_steps (one forward per site x candidate
+                               bits), steps_per_s, compile_count (probe +
+                               teacher traces — O(distinct apply_keys), so
+                               it stays flat as layers are added)
+      alloc/uniform-w4         uniform W4 PTQ baseline: aggregate recon MSE
+                               (sum of per-block err_after) + quantized-site
+                               bytes + effective tree MiB
+      alloc/auto-4.5           auto allocation at avg_bits=4.5 (the extra
+                               half bit buys 8-bit grids at the most
+                               sensitive sites)
+      alloc/auto-matched-bytes auto allocation under a weight_bytes budget
+                               set to uniform W4's quantized-site bytes —
+                               same serving bytes, sensitivity-shaped
+    """
+    from repro.allocate import (AllocationReport, Budget, probe_blocks,
+                                solve_allocation)
+    from repro.core import reconstruct as rec
+    from repro.core.qtensor import tree_weight_bytes
+    from repro.core.reconstruct import quantize_blocks
+    from repro.data import CalibrationSet, SyntheticTokens
+
+    model, params = common.get_trained_lm()
+    recipe = QuantRecipe(method="flexround", w_bits=4, w_symmetric=True,
+                         a_bits=None, w_granularity="per_channel", iters=80,
+                         lr=3e-3, batch_size=16)
+    src = SyntheticTokens(vocab=common.BENCH_CFG.vocab, seq_len=common.SEQ,
+                          seed=0)
+    cal = CalibrationSet.build(src, 64)
+    x0, blocks, assemble = model.quant_blocks(params, cal.tokens)
+
+    rec.reset_engine_stats()
+    rec.clear_engine_cache()
+    probe = probe_blocks(blocks, recipe, x0)
+    out.append(common.row(
+        "alloc/probe", probe.seconds * 1e6,
+        f"probe_steps={probe.steps};steps_per_s={probe.steps_per_s:.1f};"
+        f"compile_count={probe.compile_count}"))
+
+    w4_site_bytes = sum(per[4].cost_bytes for per in probe.scores.values())
+    variants = {
+        "uniform-w4": (recipe, None),
+        "auto-4.5": (None, Budget("avg_bits", 4.5)),
+        "auto-matched-bytes": (None, Budget("weight_bytes",
+                                            float(w4_site_bytes))),
+    }
+    for tag, (r, budget) in variants.items():
+        if r is None:
+            alloc = solve_allocation(probe, budget)
+            report = AllocationReport.build(probe, alloc)
+            r = recipe.with_rules(*report.rules())
+        t0 = time.perf_counter()
+        finalized, _, reports = quantize_blocks(blocks, r, x0,
+                                                as_qtensor=True)
+        wall = time.perf_counter() - t0
+        mse = sum(rep.err_after for rep in reports)
+        wbytes = tree_weight_bytes(assemble(finalized))
+        site_bytes = sum(per[r.resolve(s).weight.bits].cost_bytes
+                         for s, per in probe.scores.items())
+        avg_bits = (sum(per[r.resolve(s).weight.bits].numel
+                        * r.resolve(s).weight.bits
+                        for s, per in probe.scores.items())
+                    / sum(per[4].numel for per in probe.scores.values()))
+        out.append(common.row(
+            f"alloc/{tag}", wall * 1e6,
+            f"recon_mse={mse:.4e};avg_bits={avg_bits:.3f};"
+            f"site_bytes={site_bytes};"
+            f"weight_MiB={wbytes / 2**20:.3f}"))
 
 
 ALL_TABLES = [table1_ablation, table2_weights_only, table3_w_a,
               table5_lm_w8a8, table7_llm_blockwise, fig3_grid_shifts,
-              bench_kernels, bench_serving, bench_decode, bench_recon]
+              bench_kernels, bench_serving, bench_decode, bench_recon,
+              bench_alloc]

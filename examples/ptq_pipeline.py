@@ -33,6 +33,11 @@ def main():
     ap.add_argument("--iters", type=int, default=200)
     ap.add_argument("--no-rules", action="store_true",
                     help="uniform precision (skip the W8 first-layer rule)")
+    ap.add_argument("--auto-bits", type=float, default=None, metavar="AVG",
+                    help="sensitivity-guided automatic mixed precision: "
+                         "probe every site and allocate bit-widths to this "
+                         "numel-weighted average (replaces the hand-written "
+                         "W8 first-layer rule)")
     ap.add_argument("--ckpt", default="/tmp/ptq_ckpt")
     args = ap.parse_args()
 
@@ -42,8 +47,10 @@ def main():
     print(f"   fp perplexity: {fp_ppl:.3f}")
 
     # per-site rule: keep the most quantization-sensitive first layer at W8
-    # (glob over site names; later rules would win over earlier ones)
-    rules = () if args.no_rules else ("layers.0.*:w_bits=8",)
+    # (glob over site names; later rules would win over earlier ones). With
+    # --auto-bits the hand-written rule is replaced by allocator-emitted ones.
+    rules = () if (args.no_rules or args.auto_bits) else \
+        ("layers.0.*:w_bits=8",)
     print(f"2) block-wise PTQ: {args.method}, W{args.w_bits} per-channel "
           f"asym + A8 per-tensor (QDrop setting), rules={rules}, "
           f"ckpt -> {args.ckpt}")
@@ -56,9 +63,19 @@ def main():
     src = SyntheticTokens(vocab=common.BENCH_CFG.vocab, seq_len=common.SEQ)
     cal = CalibrationSet.build(src, 64)
     x0, blocks, assemble = model.quant_blocks(params, cal.tokens)
+    alloc_meta = None
+    if args.auto_bits is not None:
+        # probe -> solve -> rules: the automatic version of the W8 rule
+        from repro.allocate import Budget, auto_allocate
+        report = auto_allocate(blocks, recipe, x0,
+                               Budget("avg_bits", args.auto_bits))
+        print("   " + report.pretty().replace("\n", "\n   "))
+        recipe = recipe.with_rules(*report.rules())
+        alloc_meta = report.meta()
+        report.save(args.ckpt)  # resume validates against this allocation
     finalized, astates, reports = quantize_blocks(
         blocks, recipe, x0, checkpoint_dir=args.ckpt,
-        progress=lambda s: print("   " + s))
+        progress=lambda s: print("   " + s), allocation=alloc_meta)
     qparams = assemble(finalized)
 
     ppl = common.eval_ppl(model, qparams, astates=astates, recipe=recipe)

@@ -1,0 +1,39 @@
+"""Sensitivity-guided automatic mixed-precision allocation.
+
+Probe -> solve -> rules: score every canonical weight site under candidate
+bit-widths on the calibration set (``sensitivity``), pick one bit-width per
+site under an ``avg_bits`` or ``weight_bytes`` budget (``solve``), and emit
+ordered ``SiteRule``s that lay on top of any ``QuantRecipe`` via
+``recipe.with_rules`` (``report``). The probe pass rides the compile-once
+reconstruction engine, so it compiles O(distinct ``apply_key``s) steps —
+not O(sites).
+
+One-call entry:
+
+    report = auto_allocate(blocks, recipe, x0,
+                           Budget("avg_bits", 4.5))
+    recipe = recipe.with_rules(*report.rules())
+    quantize_blocks(blocks, recipe, x0, allocation=report.meta())
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.allocate.report import AllocationReport, validate_budget  # noqa: F401
+from repro.allocate.sensitivity import (DEFAULT_BITS, ProbeResult,  # noqa: F401
+                                        SiteScore, probe_blocks)
+from repro.allocate.solve import (Allocation, Budget,  # noqa: F401
+                                  solve_allocation)
+
+
+def auto_allocate(blocks, recipe, x0, budget: Budget, *,
+                  bits: Sequence[int] = DEFAULT_BITS,
+                  objective: str = "combined", solver: str = "auto",
+                  name: Optional[str] = None) -> AllocationReport:
+    """Probe every site, solve the budget, return the report (rules +
+    accounting). The caller applies ``report.rules()`` to its recipe and
+    passes ``report.meta()`` to ``quantize_blocks`` for resume validation."""
+    probe = probe_blocks(blocks, recipe, x0, bits=bits)
+    alloc = solve_allocation(probe, budget, objective=objective,
+                             solver=solver)
+    return AllocationReport.build(probe, alloc, name=name)

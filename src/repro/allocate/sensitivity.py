@@ -1,0 +1,247 @@
+"""Per-site quantization-sensitivity probes (EPTQ-style, paper §3.1 blocks).
+
+Scores every canonical weight site under each candidate bit-width with two
+complementary signals, both measured on the calibration set *before* any
+rounding is learned:
+
+  mse     block-output MSE with only that site RTN-quantized at ``bits``
+          (teacher vs gated student on the full-precision stream) — the
+          direct "what breaks if this site goes to b bits" signal.
+  fisher  a diagonal-Fisher / loss-perturbation proxy (AdaRound Eq. (3)
+          lineage): for y = xW the Gauss–Newton diagonal of the output MSE
+          w.r.t. W is E[x_i^2], so the expected perturbation is
+          sum_i E[x_i^2] * sum_j dW_ij^2 / d_out with dW the RTN rounding
+          error. Needs one capture pass per block and pure weight-space math
+          — no extra block forwards.
+
+Execution model (rides the PR-3 compile-once engine):
+
+  - the fp stream and teacher outputs come from ``reconstruct.probe_teacher``
+    (one compiled teacher per ``BlockHandle.apply_key``);
+  - the probe step is a single jitted function per (``apply_key``,
+    candidate ``bits``): all sites of a block are fake-quantized inside the
+    trace and a *traced one-hot gate* selects which one is live, so probing
+    S sites issues S calls of one compiled step instead of S traces. Site
+    names are canonicalized with the engine's rename machinery, so the L
+    structurally identical layers of a transformer share those traces too —
+    the probe pass compiles O(distinct apply_keys) steps, not O(sites)
+    (asserted via ``engine_stats().probe_compiles`` in tests).
+
+RTN is used as the probe quantizer regardless of the recipe's method: every
+learnable method starts from the RTN grid, so RTN error ordering is the
+method-agnostic sensitivity signal (and it needs no optimization).
+
+Scores also carry a *cascade weight* (L - block_index): sequential
+reconstruction feeds each block the already-quantized stream, so damage at
+depth i is paid by every later block. The solver multiplies scores by it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import paths as pth
+from repro.core import reconstruct as rec
+from repro.core import rtn
+from repro.core.context import QuantCtx
+from repro.core.quant_config import QuantConfig, QuantRecipe
+
+DEFAULT_BITS = (2, 3, 4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteScore:
+    """Sensitivity of one site at one candidate bit-width."""
+    site: str
+    bits: int
+    mse: float        # calibration block-output MSE, this site alone quantized
+    fisher: float     # diagonal-Fisher / loss-perturbation proxy
+    cost_bytes: int   # serving bytes of this site's QTensor at `bits`
+    numel: int        # weight elements (cost unit for avg_bits budgets)
+    # Cascade weight: block-local damage at depth i corrupts the quantized
+    # stream feeding every later block, so sequential reconstruction pays it
+    # ~(L - i) times. The solver multiplies scores by this; measured on the
+    # smoke LM it is the difference between the allocator beating uniform W4
+    # and losing to it.
+    cascade: float = 1.0
+
+
+@dataclasses.dataclass
+class ProbeResult:
+    """All probe scores plus the pass's cost accounting."""
+    scores: Dict[str, Dict[int, SiteScore]]  # site -> bits -> score
+    steps: int           # probe forward evaluations executed
+    seconds: float
+    compile_count: int   # probe-step + teacher traces this pass triggered
+
+    @property
+    def steps_per_s(self) -> float:
+        return self.steps / max(self.seconds, 1e-9)
+
+    def sites(self) -> Tuple[str, ...]:
+        return tuple(sorted(self.scores))
+
+
+class _ProbeCtx:
+    """Gated probe context: each site's effective weight is either the raw
+    weight or its RTN fake-quant, selected by a *traced* boolean gate; all
+    activations stay fp. One-hot gates isolate a single site per call while
+    keeping the compiled HLO identical across a block's sites, so one trace
+    serves every site of the block."""
+
+    __slots__ = ("_fp", "_cfgs", "_wstates", "_gates")
+
+    def __init__(self, cfgs: Dict[str, QuantConfig], wstates: Dict[str, Any],
+                 gates: Dict[str, jax.Array]):
+        self._fp = QuantCtx(mode="fp")
+        self._cfgs = cfgs
+        self._wstates = wstates
+        self._gates = gates
+
+    def _gated(self, name, w):
+        cfg = self._cfgs.get(name)
+        if cfg is None or name not in self._wstates:
+            return w
+        w_hat = rtn.apply(w, self._wstates[name], cfg)
+        return jnp.where(self._gates[name], w_hat, w).astype(w.dtype)
+
+    def linear(self, name, x, w, b=None, batch_dims=0):
+        return self._fp.linear(name, x, self._gated(name, w), b,
+                               batch_dims=batch_dims)
+
+    def conv2d(self, name, x, w, b=None, **kwargs):
+        return self._fp.conv2d(name, x, self._gated(name, w), b, **kwargs)
+
+    def get_weight(self, name, w, batch_dims=0):
+        return self._gated(name, w)
+
+    def __getattr__(self, item):
+        return getattr(self._fp, item)
+
+
+def _probe_key(block: rec.BlockHandle, plans, canon, bits: int,
+               recipe: QuantRecipe):
+    akey = (block.apply_key if block.apply_key is not None
+            else ("~obj", id(block.apply)))
+    sites = tuple(sorted(
+        (canon[rn], s.kind, s.batch_dims, plans[rn].cache_key())
+        for rn, s in block.sites.items()))
+    return (akey, sites, bits, recipe)
+
+
+def _build_probe(block: rec.BlockHandle, cfgs_c: Dict[str, QuantConfig],
+                 mapping: Dict[str, str]):
+    block_apply = block.apply
+
+    def probe(params, x, y_fp, wstates, gates):
+        rec.count_probe_compile()
+        ctx = _ProbeCtx(cfgs_c, wstates, gates)
+        y = block_apply(params, x, rec._RenameCtx(ctx, mapping))
+        return jnp.mean(jnp.square(y.astype(jnp.float32) -
+                                   y_fp.astype(jnp.float32)))
+
+    return jax.jit(probe)
+
+
+def _site_bytes(w: jax.Array, state: Dict[str, jax.Array], bits: int,
+                batch_dims: int) -> int:
+    """Serving bytes this site would occupy as a QTensor at ``bits``: packed
+    codes + the affine grid, mirroring ``qtensor.from_codes`` storage (<=4
+    bits nibble-pack along the first non-batch axis when its dim is even)."""
+    numel = w.size
+    pack_axis = min(batch_dims, w.ndim - 1)
+    packed = bits <= 4 and w.shape[pack_axis] % 2 == 0
+    code_bytes = numel // 2 if packed else numel
+    grid_bytes = 4 * (state["s1"].size + state["zero"].size)
+    return int(code_bytes + grid_bytes)
+
+
+def _fisher_proxy(dw: jax.Array, m2: Optional[jax.Array]) -> float:
+    """sum_i E[x_i^2] sum_j dW_ij^2 / d_out with the input-feature axis at
+    -2 (linear (d_in, d_out), conv (kh, kw, cin, cout), stacked experts
+    (E, d_in, d_out) all store it there). ``m2`` is the captured per-feature
+    second moment; None (site never exercised by the capture pass) degrades
+    to an unweighted squared error."""
+    dw32 = dw.astype(jnp.float32)
+    if m2 is None:
+        return float(jnp.sum(dw32 * dw32) / dw.shape[-1])
+    return float(jnp.sum(m2[:, None] * dw32 * dw32) / dw.shape[-1])
+
+
+def probe_blocks(blocks: Sequence[rec.BlockHandle], recipe: QuantRecipe,
+                 x0: jax.Array, bits: Sequence[int] = DEFAULT_BITS,
+                 ) -> ProbeResult:
+    """Score every site of every block at each candidate bit-width.
+
+    Runs on the full-precision stream (probing happens before any site is
+    finalized): block b's probe input is the teacher output of block b-1.
+    Per-site rules in ``recipe`` shape the probe configs (granularity,
+    symmetry, observer) — only ``bits`` is swept.
+    """
+    stats0 = dataclasses.replace(rec.engine_stats())
+    t0 = time.time()
+    steps = 0
+    scores: Dict[str, Dict[int, SiteScore]] = {}
+    probe_cache: Dict[Any, Any] = {}
+
+    with rec.engine_scope():
+        x = x0
+        for bi, block in enumerate(blocks):
+            cascade = float(len(blocks) - bi)
+            y_fp = rec.probe_teacher(block, recipe)(block.params, x)
+            plans = rec.site_plans(block, recipe)
+            canon = rec._canon_names(block)
+
+            # one capture pass per block: per-site input second moments for
+            # the fisher proxy
+            cap = QuantCtx(mode="capture", recipe=recipe)
+            block.apply(block.params, x, cap)
+            m2 = {}
+            for rn in block.sites:
+                xs = cap.records.get(rn)
+                if xs:
+                    x32 = xs[0].astype(jnp.float32)
+                    m2[rn] = jnp.mean(x32 * x32,
+                                      axis=tuple(range(x32.ndim - 1)))
+
+            for b in bits:
+                cfgs_c = {canon[rn]: dataclasses.replace(plans[rn].weight,
+                                                         bits=b)
+                          for rn in block.sites}
+                pkey = _probe_key(block, plans, canon, b, recipe)
+                probe_fn = probe_cache.get(pkey)
+                if probe_fn is None:
+                    probe_fn = _build_probe(block, cfgs_c, canon)
+                    probe_cache[pkey] = probe_fn
+
+                wstates, deltas = {}, {}
+                for rn, site in block.sites.items():
+                    w = pth.get_path(block.params, site.path)
+                    st = rtn.init(w, cfgs_c[canon[rn]])
+                    wstates[canon[rn]] = st
+                    deltas[rn] = (w, st,
+                                  rtn.apply(w, st, cfgs_c[canon[rn]]) - w)
+
+                for rn, site in block.sites.items():
+                    gates = {c: jnp.asarray(c == canon[rn])
+                             for c in canon.values()}
+                    mse = float(probe_fn(block.params, x, y_fp, wstates,
+                                         gates))
+                    steps += 1
+                    w, st, dw = deltas[rn]
+                    scores.setdefault(rn, {})[b] = SiteScore(
+                        site=rn, bits=b, mse=mse,
+                        fisher=_fisher_proxy(dw, m2.get(rn)),
+                        cost_bytes=_site_bytes(w, st, b, site.batch_dims),
+                        numel=int(w.size), cascade=cascade)
+            x = y_fp  # advance the fp stream
+
+    st1 = rec.engine_stats()
+    compiles = ((st1.probe_compiles - stats0.probe_compiles) +
+                (st1.teacher_compiles - stats0.teacher_compiles))
+    return ProbeResult(scores=scores, steps=steps,
+                       seconds=time.time() - t0, compile_count=compiles)

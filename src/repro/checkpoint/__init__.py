@@ -1,6 +1,8 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
     CheckpointManager,
     PTQCheckpointer,
+    load_allocation,
     load_pytree,
+    save_allocation,
     save_pytree,
 )

@@ -75,6 +75,33 @@ def exists(path: str) -> bool:
     return os.path.isdir(path) and os.path.exists(os.path.join(path, _MANIFEST))
 
 
+# ----------------------------------------------------- allocation artifacts
+_ALLOCATION = "allocation.json"
+
+
+def save_allocation(directory: str, report: dict) -> str:
+    """Atomically persist a JSON-able allocation report next to the PTQ
+    state (``<dir>/allocation.json``) so a resumed run can validate it is
+    quantizing under the same bit allocation (see repro.allocate.report)."""
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, _ALLOCATION)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, path)
+    return path
+
+
+def load_allocation(directory: str) -> Optional[dict]:
+    path = os.path.join(directory, _ALLOCATION)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
 # ----------------------------------------------------------- train ckpts
 class CheckpointManager:
     """Rolling step checkpoints for the training loop.
@@ -147,13 +174,15 @@ class PTQCheckpointer:
         return os.path.join(self.dir, "ptq_state")
 
     def save(self, next_block: int, finalized, astates, reports, x_fp, x_q,
-             plans: Optional[list] = None, engine: Optional[str] = None):
+             plans: Optional[list] = None, engine: Optional[str] = None,
+             allocation: Optional[dict] = None):
         """``plans``: per-finalized-block {site: SitePlan.summary()} dicts —
         recorded so a resume under different rules fails loudly instead of
         silently mixing bit-widths. ``engine`` records which reconstruction
-        engine produced the finalized blocks (informational: both engines
-        consume the identical RNG stream, so resuming under the other engine
-        is sound)."""
+        engine produced the finalized blocks (informational). ``allocation``:
+        summary of the automatic bit allocation that emitted the recipe's
+        rules (``AllocationReport.meta()``) — a resume under a different
+        allocation fails loudly with the allocation named."""
         tree = {
             "finalized": finalized,
             "astates": astates,
@@ -165,14 +194,31 @@ class PTQCheckpointer:
             "reports": [dataclasses.asdict(r) for r in reports],
             "plans": plans or [],
             "engine": engine,
+            "allocation": allocation,
         }
         save_pytree(self.path, tree, meta)
 
-    def load(self, blocks, recipe):
+    def load(self, blocks, recipe, allocation: Optional[dict] = None):
         if not exists(self.path):
             return None
         tree, meta = load_pytree(self.path)
         from repro.core.reconstruct import BlockReport, site_plans
+        saved_alloc = meta.get("allocation")
+
+        def _alloc_tag(alloc):
+            if not alloc:
+                return "no allocation"
+            return (f"allocation {alloc.get('name', '?')!r} "
+                    f"(digest {str(alloc.get('digest', '?'))[:12]})")
+
+        if (allocation or saved_alloc) and (
+                (allocation or {}).get("digest")
+                != (saved_alloc or {}).get("digest")):
+            raise ValueError(
+                f"PTQ resume mismatch: checkpoint was written under "
+                f"{_alloc_tag(saved_alloc)} but this run quantizes under "
+                f"{_alloc_tag(allocation)}; re-run the allocator probe or "
+                "restart with a fresh checkpoint dir")
         for i, saved in enumerate(meta.get("plans", [])):
             if i >= len(blocks):
                 break
@@ -181,8 +227,9 @@ class PTQCheckpointer:
             if now != saved:
                 raise ValueError(
                     f"PTQ resume mismatch: block {i} ({blocks[i].name}) was "
-                    f"finalized under per-site plans {saved} but the current "
-                    f"recipe resolves to {now}; restart with matching rules "
+                    f"finalized under per-site plans {saved} (emitted by "
+                    f"{_alloc_tag(saved_alloc)}) but the current recipe "
+                    f"resolves to {now}; restart with matching rules "
                     "or a fresh checkpoint dir")
         # tolerate report-schema drift across releases: unknown keys from a
         # newer writer are dropped, missing keys fall back to field defaults

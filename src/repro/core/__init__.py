@@ -26,7 +26,6 @@ from repro.core import (  # noqa: F401
     flexround,
     lsq,
     method_api,
-    methods,
     observers,
     qdrop,
     quantizer,

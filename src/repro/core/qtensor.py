@@ -46,10 +46,11 @@ class QTensor:
         return self.shape
 
     def nbytes_codes(self) -> int:
-        n = 1
-        for d in self.shape:
-            n *= d
-        return n // 2 if self.packed else n
+        # actual uint8 storage, not the static logical shape: stacked layers
+        # (models/common.stack_layers) stack the codes buffer while `shape`
+        # keeps the per-layer logical shape, so shape-derived byte counts
+        # would undercount stacked trees by the layer count
+        return int(self.codes.size)
 
     def unpacked_codes(self) -> jax.Array:
         """uint8 codes at the logical shape (nibbles expanded if packed)."""

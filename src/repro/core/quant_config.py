@@ -156,7 +156,22 @@ class SiteRule:
         return cls.make(pattern.strip(), **kv)
 
     def matches(self, site_name: str) -> bool:
-        return fnmatch.fnmatchcase(site_name, self.pattern)
+        if fnmatch.fnmatchcase(site_name, self.pattern):
+            return True
+        # Leaf-targeting patterns must also cover sites that live at the top
+        # level with no "layers.<i>." prefix (embeddings, lm_head): "*.w_up"
+        # matches both "layers.3.mlp.w_up" and a bare "w_up"; "*.embed"
+        # matches "embed". fnmatch alone requires the dot to be present.
+        return (self.pattern.startswith("*.")
+                and fnmatch.fnmatchcase(site_name, self.pattern[2:]))
+
+
+def exact_site_pattern(site_name: str) -> str:
+    """Glob pattern matching exactly ``site_name`` (fnmatch metacharacters
+    escaped). Allocator-emitted rules use this so a site whose name happens
+    to contain ``*``/``?``/``[`` cannot over-match."""
+    out = site_name.replace("[", "[[]")
+    return out.replace("*", "[*]").replace("?", "[?]")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -258,6 +273,14 @@ class QuantRecipe:
         if site is not None:
             batch_dims = getattr(site, "batch_dims", batch_dims)
         return _resolve_cached(self, site_name, batch_dims)
+
+    def with_rules(self, *extra) -> "QuantRecipe":
+        """New recipe with ``extra`` rules appended. Later rules win, so the
+        appended rules override both recipe defaults and pre-existing rules —
+        this is how allocator-emitted per-site rules lay on top of a user
+        recipe. Accepts ``SiteRule`` objects or ``"glob:key=value"`` strings
+        (validated by ``__post_init__`` as usual)."""
+        return dataclasses.replace(self, rules=self.rules + tuple(extra))
 
     def overrides_for(self, site_name: str) -> Mapping[str, Any]:
         out: dict = {}

@@ -14,13 +14,15 @@ the rounding states (paper: LSQ technique for the activation step size).
 
 Execution model (the hot path — this loop runs iters × layers times):
 
-  scan engine (default)   The minibatch schedule (epoch keys + gather
+  scan engine             The minibatch schedule (epoch keys + gather
       indices) is precomputed on device once per block, then chunks of K
       optimization steps run inside a single jitted ``jax.lax.scan`` —
       Adam moments, rounding states, LSQ states and the PRNG stream are
       threaded as the scan carry and loss/mse trajectories come back as
       stacked outputs. One dispatch per K steps instead of one per step,
-      and no host-side gathers.
+      and no host-side gathers. The RNG stream is bit-identical to the
+      removed per-iteration legacy loop; parity is pinned against recorded
+      legacy trajectories in tests/fixtures/recon_legacy_trajectories.npz.
 
   compiled-step cache     Blocks are canonicalized (site names rewritten to
       position-based tokens, per-site QDrop salts passed as traced uint32
@@ -32,10 +34,12 @@ Execution model (the hot path — this loop runs iters × layers times):
       Carried states are de-aliased (constant-dedup can hand identical init
       buffers to several sites) so ``donate_argnums`` is safe on the scan.
 
-  legacy engine           The original per-iteration Python loop (one
-      dispatch + two host gathers per step, one fresh jit per block), kept
-      for one release as the ``--legacy-loop`` escape hatch and as the
-      parity oracle for the scanned engine.
+  probe mode              The sensitivity prober (repro.allocate) rides the
+      same engine cache: ``probe_teacher`` hands out the per-``apply_key``
+      compiled teacher, ``engine_scope`` bounds the lifetime of engines a
+      probe pass builds, and probe-step traces are counted in
+      ``EngineStats.probe_compiles`` so tests can assert the probe pass
+      compiles O(distinct apply_keys) steps, not O(sites).
 
 Distribution: all jitted functions here are pjit-compatible — calibration
 tensors carry a leading sample axis that the caller shards over the data mesh
@@ -46,6 +50,7 @@ boundary; see quantize_blocks(resume_dir=...).
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 import time
@@ -61,7 +66,6 @@ from repro.core.context import QuantCtx
 from repro.core.quant_config import QuantRecipe, SitePlan
 from repro.optim.adam import AdamConfig, adam_init, adam_update
 
-ENGINES = ("scan", "legacy")
 DEFAULT_CHUNK = 100  # scan steps fused into one jitted dispatch
 
 # Per-site lr rules ride adam_update's per-leaf lr_scale tree, so the base
@@ -118,6 +122,7 @@ class EngineStats:
     teacher_compiles: int = 0
     student_compiles: int = 0
     recon_error_compiles: int = 0
+    probe_compiles: int = 0  # sensitivity-probe steps (repro.allocate)
     engine_builds: int = 0
     engine_hits: int = 0
 
@@ -125,7 +130,7 @@ class EngineStats:
     def compile_count(self) -> int:
         return (self.step_compiles + self.schedule_compiles +
                 self.teacher_compiles + self.student_compiles +
-                self.recon_error_compiles)
+                self.recon_error_compiles + self.probe_compiles)
 
 
 _STATS = EngineStats()
@@ -146,6 +151,23 @@ def reset_engine_stats() -> EngineStats:
 def clear_engine_cache() -> None:
     _ENGINE_CACHE.clear()
     _batch_schedule.clear_cache()
+
+
+@contextlib.contextmanager
+def engine_scope():
+    """Evict engines built inside the scope when it exits.
+
+    ``quantize_blocks`` and the sensitivity prober (repro.allocate) wrap
+    their runs in this: their blocks' ``apply_key`` tokens are fresh per
+    call, so entries built under the scope can never hit again, yet their
+    apply closures pin per-call constants (rope tables, encoder outputs, the
+    model itself). Entries that existed before the scope are untouched."""
+    _SCOPE_STACK.append(set())
+    try:
+        yield
+    finally:
+        for k in _SCOPE_STACK.pop():
+            _ENGINE_CACHE.pop(k, None)
 
 
 def site_plans(block: BlockHandle, recipe: QuantRecipe) -> Dict[str, SitePlan]:
@@ -200,10 +222,10 @@ def _apply_mask(grads, mask):
 # ----------------------------------------------------------- step math
 def _make_step_fn(apply_fn: Callable, recipe: QuantRecipe,
                   plans: Dict[str, SitePlan], a_opt_cfg: AdamConfig):
-    """Single optimization step, shared by both engines.
+    """Single optimization step (traced inside the engine's scan body).
 
-    ``plans`` keys the same namespace as the state dicts (real site names for
-    the legacy loop, canonical tokens for the scanned engine). Sites may carry
+    ``plans`` keys the same namespace as the state dicts (the engine passes
+    canonical position tokens, see _RenameCtx). Sites may carry
     heterogeneous plans (method, bits, lr): each site's rounding state is
     updated by its own method, all inside one tree-wide Adam update whose
     per-leaf lr_scale carries the rule-overridden learning rates.
@@ -486,79 +508,30 @@ def _run_scan(block: BlockHandle, recipe: QuantRecipe,
             jnp.concatenate(mses) if mses else jnp.zeros((0,)))
 
 
-def _run_legacy(block: BlockHandle, recipe: QuantRecipe,
-                plans: Dict[str, SitePlan], wstates, astates, x_q, y_fp, key):
-    """Seed-style per-iteration Python loop (escape hatch, parity oracle)."""
-    err0 = recon_error(block, recipe, wstates, astates, x_q, y_fp)
-    a_opt_cfg = AdamConfig(lr=recipe.lr_lsq)
-    wopt = adam_init(wstates, _W_BASE_CFG)
-    aopt = adam_init(astates, a_opt_cfg)
-    step_raw = _make_step_fn(block.apply, recipe, plans, a_opt_cfg)
-
-    def counted_step(*args):
-        _STATS.step_compiles += 1
-        return step_raw(*args)
-
-    step_fn = jax.jit(counted_step)
-
-    n = x_q.shape[0]
-    bs = min(recipe.batch_size, n)
-
-    @jax.jit
-    def sample(k):
-        return jax.random.choice(k, n, (bs,), replace=False)
-
-    t0 = time.time()
-    losses, mses = [], []
-    for it in range(recipe.iters):
-        key, k1, k2 = jax.random.split(key, 3)
-        if bs == n:  # full-batch recon: no gather needed
-            xb, yb = x_q, y_fp
-        else:
-            i = sample(k1)
-            xb = jnp.take(x_q, i, axis=0)
-            yb = jnp.take(y_fp, i, axis=0)
-        wstates, astates, wopt, aopt, loss, mse = step_fn(
-            block.params, wstates, astates, wopt, aopt, xb, yb,
-            jnp.int32(it), k2, None)
-        losses.append(loss)
-        mses.append(mse)
-    if mses:
-        jax.block_until_ready(mses[-1])
-    loop_s = time.time() - t0
-    err1 = recon_error(block, recipe, wstates, astates, x_q, y_fp)
-    return (wstates, astates, err0, err1, loop_s,
-            jnp.stack(losses) if losses else jnp.zeros((0,)),
-            jnp.stack(mses) if mses else jnp.zeros((0,)))
-
-
 def reconstruct_block(block: BlockHandle, recipe: QuantRecipe, x_q: jax.Array,
                       y_fp: jax.Array, key: jax.Array,
                       astates: Optional[Dict[str, Any]] = None, *,
-                      engine: str = "scan", chunk: int = DEFAULT_CHUNK,
+                      chunk: int = DEFAULT_CHUNK,
                       ) -> Tuple[Dict[str, Any], Dict[str, Any], BlockReport]:
     """Optimize rounding (+LSQ) states for one block. Returns final states.
 
-    ``engine="scan"`` (default) runs the fused, compile-cached device loop;
-    ``engine="legacy"`` the per-iteration Python loop. Both consume the same
-    RNG stream and produce allclose trajectories. The report carries the
-    measured loop throughput (``steps_per_s``) and the loss/mse trajectories
-    (``rep.loss_curve`` / ``rep.mse_curve``, stacked device arrays).
+    Runs the fused, compile-cached device loop. The RNG stream matches the
+    removed per-iteration legacy loop bit-for-bit (trajectory parity is
+    pinned against recorded fixtures in tests/test_recon_engine.py). The
+    report carries the measured loop throughput (``steps_per_s``) and the
+    loss/mse trajectories (``rep.loss_curve`` / ``rep.mse_curve``, stacked
+    device arrays).
     """
-    if engine not in ENGINES:
-        raise ValueError(f"engine {engine!r} not in {ENGINES}")
     t0 = time.time()
     plans = site_plans(block, recipe)
     wstates = init_wstates(block, recipe)
     astates = astates if astates is not None else init_astates(block, recipe, x_q)
 
-    run = _run_scan if engine == "scan" else _run_legacy
-    extra = (chunk,) if engine == "scan" else ()
-    wstates, astates, err0, err1, loop_s, loss_curve, mse_curve = run(
-        block, recipe, plans, wstates, astates, x_q, y_fp, key, *extra)
+    wstates, astates, err0, err1, loop_s, loss_curve, mse_curve = _run_scan(
+        block, recipe, plans, wstates, astates, x_q, y_fp, key, chunk)
 
     rep = BlockReport(block.name, err0, err1, recipe.iters,
-                      time.time() - t0, engine=engine,
+                      time.time() - t0,
                       steps_per_s=recipe.iters / max(loop_s, 1e-9))
     rep.loss_curve = loss_curve
     rep.mse_curve = mse_curve
@@ -582,22 +555,24 @@ def finalize_block(block: BlockHandle, recipe: QuantRecipe, wstates,
     return params
 
 
+# --------------------------------------------------------------- probe entry
+def probe_teacher(block: BlockHandle, recipe: QuantRecipe):
+    """Compiled teacher for sensitivity-probe passes (repro.allocate).
+
+    Shares the engine cache, so the L structurally identical blocks of a
+    transformer compile one teacher. Call inside ``engine_scope()`` — probe
+    passes build engines whose closures pin per-call constants."""
+    eng, _ = _get_engine(block, recipe, site_plans(block, recipe))
+    return eng.teacher
+
+
+def count_probe_compile() -> None:
+    """Called by probe-step traces at trace time (repro.allocate), so
+    ``engine_stats().probe_compiles`` counts actual XLA compilations."""
+    _STATS.probe_compiles += 1
+
+
 # --------------------------------------------------------------------- driver
-def _teacher_fn(block: BlockHandle):
-    def f(p, x):
-        _STATS.teacher_compiles += 1
-        return block.apply(p, x, QuantCtx(mode="fp"))
-    return jax.jit(f)
-
-
-def _student_fn(block: BlockHandle, recipe: QuantRecipe):
-    def f(p, x, astates):
-        _STATS.student_compiles += 1
-        ctx = QuantCtx(mode="deploy", recipe=recipe, astates=astates)
-        return block.apply(p, x, ctx)
-    return jax.jit(f)
-
-
 def _explode_layerwise(block: BlockHandle, recipe: QuantRecipe, x_q):
     """Yield per-site sub-blocks for recon='layer' (AdaRound-style).
 
@@ -634,31 +609,31 @@ def quantize_blocks(blocks: List[BlockHandle], recipe: QuantRecipe,
                     as_qtensor: bool = True,
                     checkpoint_dir: Optional[str] = None,
                     progress: Optional[Callable[[str], None]] = None, *,
-                    engine: str = "scan", chunk: int = DEFAULT_CHUNK,
+                    chunk: int = DEFAULT_CHUNK,
+                    allocation: Optional[dict] = None,
                     ) -> Tuple[List[Any], Dict[str, Any], List[BlockReport]]:
     """Sequentially quantize a chain of blocks (the paper's full procedure).
 
     Returns (per-block finalized params, astates, reports). If
     ``checkpoint_dir`` is set, per-block state is saved after each block and
-    a crashed run resumes at the first un-finalized block. With the default
-    scanned engine the teacher/student/recon-step compilations are shared
-    across structurally identical blocks (see ``BlockHandle.apply_key``).
+    a crashed run resumes at the first un-finalized block. Teacher/student/
+    recon-step compilations are shared across structurally identical blocks
+    (see ``BlockHandle.apply_key``).
+
+    ``allocation``: optional summary of the bit allocation that emitted the
+    recipe's rules (``AllocationReport.meta()`` from repro.allocate). It is
+    recorded in every per-block checkpoint; a resume whose recipe or
+    allocation no longer matches fails loudly, naming the allocation.
     """
-    if engine not in ENGINES:
-        raise ValueError(f"engine {engine!r} not in {ENGINES}")
-    _SCOPE_STACK.append(set())
-    try:
+    with engine_scope():
+        # engines built here are released on exit: their apply closures pin
+        # per-call constants and their apply_key tokens can never hit again
         return _quantize_blocks(blocks, recipe, x0, key, as_qtensor,
-                                checkpoint_dir, progress, engine, chunk)
-    finally:
-        # release this call's engines: their apply closures pin per-call
-        # constants and their apply_key tokens can never hit again
-        for k in _SCOPE_STACK.pop():
-            _ENGINE_CACHE.pop(k, None)
+                                checkpoint_dir, progress, chunk, allocation)
 
 
 def _quantize_blocks(blocks, recipe, x0, key, as_qtensor, checkpoint_dir,
-                     progress, engine, chunk):
+                     progress, chunk, allocation):
     key = key if key is not None else jax.random.key(recipe.seed)
     ckpt = None
     if checkpoint_dir is not None:
@@ -673,24 +648,18 @@ def _quantize_blocks(blocks, recipe, x0, key, as_qtensor, checkpoint_dir,
 
     start = 0
     if ckpt is not None:
-        resumed = ckpt.load(blocks, recipe)
+        resumed = ckpt.load(blocks, recipe, allocation=allocation)
         if resumed is not None:
             start, finalized, astates, reports, x_fp, x_q = resumed
 
     def advance_student(block, eng, canon, params, x):
-        if eng is not None:
-            a_c = {canon[r]: astates[r] for r in block.sites if r in astates}
-            return eng.student(params, x, a_c)
-        return _student_fn(block, recipe)(params, x, astates)
+        a_c = {canon[r]: astates[r] for r in block.sites if r in astates}
+        return eng.student(params, x, a_c)
 
     for i in range(len(blocks)):
         block = blocks[i]
-        eng = canon = None
-        if engine == "scan":
-            eng, canon = _get_engine(block, recipe, site_plans(block, recipe))
-            y_fp = eng.teacher(block.params, x_fp)
-        else:
-            y_fp = _teacher_fn(block)(block.params, x_fp)
+        eng, canon = _get_engine(block, recipe, site_plans(block, recipe))
+        y_fp = eng.teacher(block.params, x_fp)
         if i < start:
             # replay streams from checkpointed finalized params
             x_q = advance_student(block, eng, canon, finalized[i], x_q)
@@ -703,15 +672,11 @@ def _quantize_blocks(blocks, recipe, x0, key, as_qtensor, checkpoint_dir,
             wstates_all: Dict[str, Any] = {}
             for name, site, sub, x_site in _explode_layerwise(block, recipe,
                                                               x_q):
-                if engine == "scan":
-                    sub_eng, _ = _get_engine(sub, recipe,
-                                             site_plans(sub, recipe))
-                    y_site = sub_eng.teacher(sub.params, x_site)
-                else:
-                    y_site = _teacher_fn(sub)(sub.params, x_site)
+                sub_eng, _ = _get_engine(sub, recipe, site_plans(sub, recipe))
+                y_site = sub_eng.teacher(sub.params, x_site)
                 ws, a_sub, rep = reconstruct_block(sub, recipe, x_site, y_site,
                                                    bkey, astates=dict(astates),
-                                                   engine=engine, chunk=chunk)
+                                                   chunk=chunk)
                 astates.update(a_sub)
                 wstates_all[name] = ws[name]
                 reports.append(rep)
@@ -719,7 +684,6 @@ def _quantize_blocks(blocks, recipe, x0, key, as_qtensor, checkpoint_dir,
         else:
             wstates, astates, rep = reconstruct_block(block, recipe, x_q, y_fp,
                                                       bkey, astates=astates,
-                                                      engine=engine,
                                                       chunk=chunk)
             reports.append(rep)
 
@@ -735,6 +699,6 @@ def _quantize_blocks(blocks, recipe, x0, key, as_qtensor, checkpoint_dir,
                           for n, p in site_plans(b, recipe).items()}
                          for b in blocks[:i + 1]]
             ckpt.save(i + 1, finalized, astates, reports, x_fp, x_q,
-                      plans=plan_meta, engine=engine)
+                      plans=plan_meta, engine="scan", allocation=allocation)
 
     return finalized, astates, reports

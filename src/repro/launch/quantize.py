@@ -12,6 +12,17 @@ gives the standard LLM recipe (W4 body, W8 first/last layers); rules may also
 override method, granularity, lr, or a_bits per site (``a_bits=none`` keeps a
 site's activations fp).
 
+Automatic mixed precision (sensitivity-guided, repro.allocate):
+
+    ... --auto-bits 4.5                   # numel-weighted average bits
+    ... --auto-bits 150000 --budget bytes # serving-bytes budget
+
+probes every site at candidate bit-widths on the calibration set, solves the
+budget and appends the emitted per-site rules to the recipe — probe, solve
+and quantize in one invocation. The allocation is persisted to --resume-dir
+(allocation.json) and stamped into every per-block checkpoint, so a resume
+under a different allocation fails loudly.
+
 Fault tolerance: per-block PTQ checkpoints (--resume-dir) — a preempted run
 resumes at the first unfinished block with identical RNG; resuming under
 different rules fails loudly (per-site plans are recorded in the checkpoint).
@@ -65,10 +76,19 @@ def main():
                     help="after quantization, run a short deploy-mode decode "
                          "through the kernel serving path and report "
                          "us/step + weight bytes moved")
-    ap.add_argument("--legacy-loop", action="store_true",
-                    help="run reconstruction through the per-iteration "
-                         "Python loop instead of the scan-fused compile-"
-                         "cached engine (escape hatch, kept for one release)")
+    ap.add_argument("--auto-bits", type=float, default=None, metavar="VALUE",
+                    help="automatic mixed precision: probe per-site "
+                         "sensitivity and allocate bit-widths to meet this "
+                         "budget (interpreted per --budget); emitted rules "
+                         "are appended to the recipe")
+    ap.add_argument("--budget", default="avg_bits",
+                    choices=["avg_bits", "bytes"],
+                    help="meaning of --auto-bits: numel-weighted average "
+                         "bits, or total serving bytes (packed codes + "
+                         "affine grid)")
+    ap.add_argument("--alloc-objective", default="combined",
+                    choices=["mse", "fisher", "combined"],
+                    help="sensitivity metric the allocator minimizes")
     ap.add_argument("--scan-chunk", type=int, default=DEFAULT_CHUNK,
                     help="optimization steps fused per device dispatch in "
                          "the scanned engine")
@@ -93,6 +113,14 @@ def main():
     src = SyntheticTokens(vocab=cfg.vocab, seq_len=args.seq, seed=0)
     cal = CalibrationSet.build(src, args.calib)
     x0, blocks, assemble = model.quant_blocks(params, cal.tokens)
+
+    reset_engine_stats()
+    alloc_meta = None
+    if args.auto_bits is not None:
+        recipe, alloc_meta = apply_auto_bits(
+            blocks, recipe, x0, value=args.auto_bits, budget=args.budget,
+            objective=args.alloc_objective, resume_dir=args.resume_dir)
+
     if recipe.rules:
         overridden = [(n, p.summary()) for b in blocks
                       for n, p in site_plans(b, recipe).items()
@@ -100,12 +128,10 @@ def main():
         print(f"rules override {len(overridden)} site(s):")
         for n, s in overridden:
             print(f"  {n}: {s}")
-    engine = "legacy" if args.legacy_loop else "scan"
-    reset_engine_stats()
     finalized, astates, reports = quantize_blocks(
         blocks, recipe, x0, checkpoint_dir=args.resume_dir,
         progress=lambda s: print(s, flush=True),
-        engine=engine, chunk=args.scan_chunk)
+        chunk=args.scan_chunk, allocation=alloc_meta)
     qparams = assemble(finalized)
 
     stats = engine_stats()
@@ -114,13 +140,14 @@ def main():
     ran = [r for r in reports if r.steps_per_s > 0]
     steps = sum(r.iters for r in ran)
     loop_s = sum(r.iters / r.steps_per_s for r in ran)
-    print(f"recon[{engine}]: {steps} steps over {len(ran)} unit(s) in "
+    print(f"recon: {steps} steps over {len(ran)} unit(s) in "
           f"{loop_s:.2f}s ({steps / max(loop_s, 1e-9):.1f} steps/s); "
           f"compiles: step={stats.step_compiles} "
           f"teacher={stats.teacher_compiles} "
           f"student={stats.student_compiles} "
           f"recon_err={stats.recon_error_compiles} "
           f"schedule={stats.schedule_compiles} "
+          f"probe={stats.probe_compiles} "
           f"(total {stats.compile_count})", flush=True)
 
     out = args.out or f"/tmp/quantized_{cfg.name}_{args.method}"
@@ -139,6 +166,40 @@ def main():
     if args.serve_smoke:
         serve_smoke(model, qparams, astates, recipe, cfg,
                     backend=args.backend)
+
+
+def apply_auto_bits(blocks, recipe, x0, *, value: float, budget: str,
+                    objective: str = "combined", resume_dir=None):
+    """Probe -> solve -> append emitted rules. Returns (recipe, alloc_meta).
+
+    When ``resume_dir`` holds an ``allocation.json`` from an earlier run the
+    recorded allocation is validated against the requested budget and reused
+    (no re-probe) so the resumed run quantizes under the identical rules;
+    a different budget fails loudly.
+    """
+    from repro.allocate import AllocationReport, Budget, auto_allocate
+
+    kind = "weight_bytes" if budget == "bytes" else budget
+    report = None
+    if resume_dir is not None:
+        report = AllocationReport.load(resume_dir)
+    if report is not None:
+        want = {"kind": kind, "value": value}
+        if report.budget != want or report.objective != objective:
+            raise ValueError(
+                f"resume dir {resume_dir} holds allocation "
+                f"{report.name!r} for budget {report.budget} / objective "
+                f"{report.objective!r} but this run requests {want} / "
+                f"{objective!r}; re-run with the original settings or a "
+                "fresh checkpoint dir")
+        print(f"reusing recorded allocation from {resume_dir}:")
+    else:
+        report = auto_allocate(blocks, recipe, x0, Budget(kind, value),
+                               objective=objective)
+        if resume_dir is not None:
+            report.save(resume_dir)
+    print(report.pretty(), flush=True)
+    return recipe.with_rules(*report.rules()), report.meta()
 
 
 def serve_smoke(model, qparams, astates, recipe, cfg, *, backend: str = "auto",

@@ -1,0 +1,286 @@
+"""Sensitivity-guided automatic mixed-precision allocator (repro.allocate).
+
+Covers the subsystem's contracts:
+  - probe scores behave (MSE falls with bits, cascade weights depth),
+  - the probe pass compiles O(distinct apply_keys) steps, not O(sites),
+  - greedy + exact-DP solvers satisfy the budget (DP no worse than greedy),
+  - emitted rules resolve through QuantRecipe (including prefix-less sites),
+  - auto allocation beats uniform W4 at avg_bits=4.5 on a block chain,
+  - allocation round-trips through checkpoints: identical rules resume,
+    mutated rules fail loudly with the allocation named.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.allocate import (AllocationReport, Budget, ProbeResult, SiteScore,
+                            auto_allocate, probe_blocks, solve_allocation,
+                            validate_budget)
+from repro.core import QuantRecipe
+from repro.core import reconstruct as rec
+from repro.core.context import QuantCtx
+from repro.core.reconstruct import BlockHandle, Site, quantize_blocks
+
+
+# ------------------------------------------------------------- test blocks
+def make_chain(n, token, d=24, h=40, seed=3):
+    blocks = []
+    for i, key in enumerate(jax.random.split(jax.random.key(seed), n)):
+        k1, k2 = jax.random.split(key)
+        name = f"layers.{i}"
+        params = {
+            "w1": jax.random.normal(k1, (d, h), jnp.float32) * d**-0.5,
+            "w2": jax.random.normal(k2, (h, d), jnp.float32) * h**-0.5,
+        }
+
+        def apply(p, x, ctx, _n=name):
+            z = jax.nn.gelu(ctx.linear(f"{_n}.w1", x, p["w1"]))
+            return ctx.linear(f"{_n}.w2", z, p["w2"]) + x
+
+        sites = {f"{name}.w1": Site(("w1",)), f"{name}.w2": Site(("w2",))}
+        blocks.append(BlockHandle(name, params, apply, sites,
+                                  apply_key=token))
+    return blocks
+
+
+def make_prefixless_block(d=16):
+    """A block whose sites have no 'layers.<i>.' prefix (embeddings/head)."""
+    k1, k2 = jax.random.split(jax.random.key(0))
+    params = {
+        "embed": jax.random.normal(k1, (d, d), jnp.float32) * d**-0.5,
+        "lm_head": jax.random.normal(k2, (d, d), jnp.float32) * d**-0.5,
+    }
+
+    def apply(p, x, ctx):
+        h = ctx.linear("embed", x, p["embed"])
+        return ctx.linear("lm_head", jax.nn.gelu(h), p["lm_head"])
+
+    sites = {"embed": Site(("embed",)), "lm_head": Site(("lm_head",))}
+    return BlockHandle("top", params, apply, sites)
+
+
+RECIPE = QuantRecipe(method="flexround", w_bits=4, w_symmetric=True,
+                     a_bits=None, iters=40, lr=3e-3, batch_size=8)
+X = jax.random.normal(jax.random.key(1), (48, 24), jnp.float32)
+
+
+# ------------------------------------------------------------------- probe
+def test_probe_scores_monotone_and_cascade_weighted():
+    blocks = make_chain(3, token=(object(),))
+    probe = probe_blocks(blocks, RECIPE, X)
+    assert probe.steps == 3 * 2 * 4  # blocks x sites x candidate bits
+    assert probe.steps_per_s > 0
+    for site, per in probe.scores.items():
+        assert set(per) == {2, 3, 4, 8}
+        assert per[2].mse > per[4].mse > per[8].mse >= 0
+        assert per[2].fisher > per[4].fisher > per[8].fisher >= 0
+        assert per[4].numel == 960
+        # <=4-bit levels nibble-pack: half the code bytes of the 8-bit level
+        assert per[8].cost_bytes - per[4].cost_bytes == 960 // 2
+    # cascade weight = blocks remaining: depth 0 scores weigh 3x depth 2
+    assert probe.scores["layers.0.w1"][4].cascade == 3.0
+    assert probe.scores["layers.2.w1"][4].cascade == 1.0
+
+
+def test_probe_compiles_per_apply_key_not_per_site():
+    """The acceptance contract: probe-step traces scale with distinct
+    apply_keys x candidate bits, flat in depth/site count."""
+    counts = {}
+    for n in (2, 6):
+        rec.reset_engine_stats()
+        rec.clear_engine_cache()
+        probe = probe_blocks(make_chain(n, token=(object(),)), RECIPE, X)
+        st = rec.engine_stats()
+        counts[n] = (st.probe_compiles, st.teacher_compiles)
+        assert probe.compile_count == sum(counts[n])
+        assert probe.steps == n * 2 * 4  # runs scale, traces don't
+    assert counts[2] == counts[6] == (4, 1), counts
+
+
+# ------------------------------------------------------------------ solver
+def _mk_probe(site_levels):
+    """site_levels: {site: {bits: (mse, cost_bytes, numel)}} -> ProbeResult."""
+    scores = {}
+    for site, per in site_levels.items():
+        scores[site] = {
+            b: SiteScore(site=site, bits=b, mse=mse, fisher=0.0,
+                         cost_bytes=cb, numel=numel)
+            for b, (mse, cb, numel) in per.items()}
+    return ProbeResult(scores=scores, steps=1, seconds=1.0, compile_count=0)
+
+
+def test_greedy_and_dp_satisfy_budget_dp_no_worse():
+    # crafted so plain greedy is suboptimal: B's cheap upgrade blocks A's
+    # big one; the exact DP must find the better pairing
+    probe = _mk_probe({
+        "a": {2: (10.0, 2, 100), 8: (1.0, 6, 100)},
+        "b": {2: (6.0, 2, 100), 4: (0.0, 4, 100)},
+    })
+    budget = Budget("weight_bytes", 8)
+    got = {}
+    for solver in ("greedy", "dp"):
+        alloc = solve_allocation(probe, budget, objective="mse",
+                                 solver=solver)
+        assert alloc.cost <= alloc.capacity
+        got[solver] = alloc
+    assert got["dp"].predicted_score <= got["greedy"].predicted_score
+    assert got["dp"].bits == {"a": 8, "b": 2}
+    auto = solve_allocation(probe, budget, objective="mse", solver="auto")
+    assert auto.solver == "dp"  # tiny grid: exact DP selected automatically
+    assert auto.predicted_score == got["dp"].predicted_score
+
+
+def test_avg_bits_budget_caps_weighted_average():
+    probe = _mk_probe({
+        s: {b: (float(2 ** -b) * (10 if s == "hot" else 1),
+                50 * b, 100)
+            for b in (2, 4, 8)}
+        for s in ("hot", "cold1", "cold2", "cold3")})
+    alloc = solve_allocation(probe, Budget("avg_bits", 4.5), objective="mse")
+    assert sum(100 * b for b in alloc.bits.values()) <= 4.5 * 400
+    assert alloc.avg_bits <= 4.5
+    assert alloc.bits["hot"] == 8  # the sensitive site gets the headroom
+
+
+def test_infeasible_budget_raises():
+    probe = _mk_probe({"a": {4: (1.0, 100, 100), 8: (0.0, 200, 100)}})
+    with pytest.raises(ValueError, match="infeasible"):
+        solve_allocation(probe, Budget("weight_bytes", 50))
+    with pytest.raises(ValueError, match="infeasible"):
+        solve_allocation(probe, Budget("avg_bits", 1.0))
+
+
+def test_budget_validation_rejects_bad_kind():
+    with pytest.raises(ValueError, match="budget kind"):
+        Budget("bits_per_layer", 4)
+    with pytest.raises(ValueError, match="must be > 0"):
+        Budget("avg_bits", 0)
+
+
+# ------------------------------------------------------- rules + round trip
+def test_emitted_rules_resolve_to_chosen_bits():
+    blocks = make_chain(3, token=(object(),))
+    report = auto_allocate(blocks, RECIPE, X, Budget("avg_bits", 4.5))
+    assert validate_budget(report)
+    recipe = RECIPE.with_rules(*report.rules())
+    for site, bits in report.bits().items():
+        assert recipe.resolve(site).weight.bits == bits
+    # later rules win: the allocation overrides a pre-existing user rule
+    user = RECIPE.with_rules("layers.0.*:w_bits=2")
+    recipe2 = user.with_rules(*report.rules())
+    assert recipe2.resolve("layers.0.w1").weight.bits == \
+        report.bits()["layers.0.w1"]
+
+
+def test_allocator_covers_prefixless_sites():
+    """Satellite contract: allocator-emitted rules must cover embeddings/
+    head-style sites that carry no 'layers.<i>.' prefix."""
+    block = make_prefixless_block()
+    x = jax.random.normal(jax.random.key(2), (32, 16), jnp.float32)
+    report = auto_allocate([block], RECIPE, x, Budget("avg_bits", 6.0))
+    assert set(report.bits()) == {"embed", "lm_head"}
+    recipe = RECIPE.with_rules(*report.rules())
+    for site, bits in report.bits().items():
+        assert recipe.resolve(site).weight.bits == bits
+    # and the emitted recipe actually reconstructs + exports those sites
+    fin, _, _ = quantize_blocks([block], dataclasses.replace(
+        recipe, iters=2), x)
+    from repro.core.qtensor import QTensor
+    leaves = [l for l in jax.tree.leaves(
+        fin[0], is_leaf=lambda l: isinstance(l, QTensor))
+        if isinstance(l, QTensor)]
+    assert sorted(q.bits for q in leaves) == sorted(report.bits().values())
+
+
+def test_report_json_round_trip_and_digest():
+    blocks = make_chain(2, token=(object(),))
+    report = auto_allocate(blocks, RECIPE, X, Budget("avg_bits", 4.5))
+    clone = AllocationReport.from_dict(report.to_dict())
+    assert clone.digest() == report.digest()
+    assert clone.bits() == report.bits()
+    assert [r.pattern for r in clone.rules()] == \
+        [r.pattern for r in report.rules()]
+    # digest tracks the decision, not probe timings
+    moved = AllocationReport.from_dict(
+        {**report.to_dict(), "probe": {"steps": 0, "seconds": 9.9,
+                                       "steps_per_s": 0,
+                                       "compile_count": 0}})
+    assert moved.digest() == report.digest()
+    other = auto_allocate(blocks, RECIPE, X, Budget("avg_bits", 5.0))
+    assert other.digest() != report.digest()
+
+
+# ---------------------------------------------------------- quality gate
+def test_auto_beats_uniform_w4_at_matched_budget_slack():
+    """avg_bits=4.5 must strictly beat uniform W4 in aggregate recon MSE:
+    the extra half bit lands at the sites the probe rates most sensitive."""
+    token = (object(),)
+    blocks = make_chain(4, token=token)
+    uniform = RECIPE
+    report = auto_allocate(blocks, uniform, X, Budget("avg_bits", 4.5))
+    assert validate_budget(report)
+    auto = uniform.with_rules(*report.rules())
+
+    _, _, rep_u = quantize_blocks(blocks, uniform, X)
+    _, _, rep_a = quantize_blocks(blocks, auto, X)
+    err_u = sum(r.err_after for r in rep_u)
+    err_a = sum(r.err_after for r in rep_a)
+    assert err_a < err_u, (err_a, err_u)
+
+
+# ------------------------------------------------------------- checkpoints
+def _alloc_setup(tmp_path):
+    blocks = make_chain(2, token=(object(),))
+    base = dataclasses.replace(RECIPE, method="rtn", iters=1)
+    report = auto_allocate(blocks, base, X, Budget("avg_bits", 4.5))
+    recipe = base.with_rules(*report.rules())
+    quantize_blocks(blocks, recipe, X, checkpoint_dir=str(tmp_path),
+                    allocation=report.meta())
+    report.save(str(tmp_path))
+    return blocks, base, recipe, report
+
+
+def test_checkpoint_resume_same_allocation_succeeds(tmp_path):
+    blocks, base, recipe, report = _alloc_setup(tmp_path)
+    from repro.checkpoint.checkpoint import PTQCheckpointer
+    resumed = PTQCheckpointer(str(tmp_path)).load(
+        blocks, recipe, allocation=report.meta())
+    assert resumed is not None and resumed[0] == len(blocks)
+    # the persisted AllocationReport round-trips with the same identity
+    loaded = AllocationReport.load(str(tmp_path))
+    assert loaded is not None and loaded.digest() == report.digest()
+    # a full quantize_blocks resume replays cleanly under identical rules
+    fin, _, _ = quantize_blocks(blocks, recipe, X,
+                                checkpoint_dir=str(tmp_path),
+                                allocation=report.meta())
+    assert len(fin) == len(blocks)
+
+
+def test_checkpoint_mutated_rules_fail_naming_allocation(tmp_path):
+    blocks, base, recipe, report = _alloc_setup(tmp_path)
+    from repro.checkpoint.checkpoint import PTQCheckpointer
+    flipped = {s: (8 if b != 8 else 4) for s, b in report.bits().items()}
+    mutated = base.with_rules(*recipe.rules,
+                              *(f"{s}:w_bits={b}"
+                                for s, b in flipped.items()))
+    with pytest.raises(ValueError, match="emitted by allocation"):
+        PTQCheckpointer(str(tmp_path)).load(blocks, mutated,
+                                            allocation=report.meta())
+    # the error names the allocation that produced the checkpoint
+    with pytest.raises(ValueError, match=report.name):
+        quantize_blocks(blocks, mutated, X, checkpoint_dir=str(tmp_path),
+                        allocation=report.meta())
+
+
+def test_checkpoint_different_allocation_digest_fails(tmp_path):
+    blocks, base, recipe, report = _alloc_setup(tmp_path)
+    other = auto_allocate(blocks, base, X, Budget("avg_bits", 5.5))
+    from repro.checkpoint.checkpoint import PTQCheckpointer
+    with pytest.raises(ValueError, match="resume mismatch.*allocation"):
+        PTQCheckpointer(str(tmp_path)).load(blocks, recipe,
+                                            allocation=other.meta())
+    # dropping the allocation entirely must also fail loudly
+    with pytest.raises(ValueError, match="no allocation"):
+        PTQCheckpointer(str(tmp_path)).load(blocks, recipe, allocation=None)

@@ -121,11 +121,13 @@ def test_unknown_method_rejected_by_recipe():
         QuantRecipe(rules=("layers.0.*:method=does-not-exist",))
 
 
-def test_methods_get_is_deprecated_alias():
-    from repro.core import methods
-    with pytest.deprecated_call():
-        m = methods.get("flexround")
-    assert m is method_api.get_method("flexround")
+def test_methods_alias_is_gone():
+    """The one-release deprecated `repro.core.methods` alias was removed:
+    method_api is the single entry point."""
+    with pytest.raises(ImportError):
+        import repro.core.methods  # noqa: F401
+    assert not hasattr(__import__("repro.core", fromlist=["core"]),
+                       "methods")
 
 
 # ------------------------------------------------------------ rule resolution
@@ -155,6 +157,39 @@ def test_rule_parsing_and_validation():
     recipe = QuantRecipe(rules=("*.w1:w_bits=2",))
     assert isinstance(recipe.rules[0], SiteRule)
     assert recipe.resolve("layers.3.w1").weight.bits == 2
+
+
+def test_leaf_glob_matches_prefixless_sites():
+    """Leaf-targeting patterns ('*.w_up') must cover sites with no
+    'layers.<i>.' prefix (embeddings, lm_head) so allocator-emitted and
+    hand-written rules can address them uniformly."""
+    r = SiteRule.parse("*.w_up:w_bits=8")
+    assert r.matches("layers.3.mlp.w_up")
+    assert r.matches("w_up")          # prefix-less site
+    assert not r.matches("mlp_w_up")  # leaf name must match exactly
+    r2 = SiteRule.parse("*.embed:w_bits=8")
+    assert r2.matches("embed")
+    assert r2.matches("vision.embed")
+    assert not r2.matches("token_embedding")
+    # resolution end-to-end, both spellings
+    recipe = QuantRecipe(w_bits=4, rules=("*.w1:w_bits=2", "embed:w_bits=8"))
+    assert recipe.resolve("w1").weight.bits == 2
+    assert recipe.resolve("layers.3.w1").weight.bits == 2
+    assert recipe.resolve("embed").weight.bits == 8
+    assert recipe.resolve("lm_head").weight.bits == 4  # untouched default
+    # "layers.*" stays scoped: it must NOT leak onto top-level sites
+    scoped = QuantRecipe(w_bits=4, rules=("layers.*:w_bits=8",))
+    assert scoped.resolve("embed").weight.bits == 4
+
+
+def test_exact_site_pattern_escapes_metachars():
+    from repro.core.quant_config import exact_site_pattern
+    r = SiteRule.make(exact_site_pattern("odd[site].*name"), w_bits=8)
+    assert r.matches("odd[site].*name")
+    assert not r.matches("odd[site].XXname")
+    plain = SiteRule.make(exact_site_pattern("layers.0.wq"), w_bits=8)
+    assert plain.matches("layers.0.wq")
+    assert not plain.matches("layers.0.wqx")
 
 
 def test_resolve_patches_batch_dims():
