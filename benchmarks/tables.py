@@ -256,6 +256,16 @@ def bench_recon(out: List[str]):
       recon/chain-L{2,6}/scan identical-structure MLP chains, the dispatch-
                               bound regime: compile_count must stay flat
                               from L2 to L6 (the compile-once cache)
+      recon/sharded/scan      the L6 chain under a data-parallel mesh
+                              (calibration streams sharded over the data
+                              axes, states replicated): compile_count must
+                              equal the unsharded L6 row, and steps_per_s is
+                              the distributed-calibration throughput signal.
+                              Runs the 2x4 debug mesh when 8 devices are
+                              visible (the recon-sharded-smoke CI job forces
+                              them on the host platform), else a mesh over
+                              every available device — the derived dp/
+                              devices fields say which
 
     derived columns:
       steps_per_s      median per-block loop throughput (steady state; the
@@ -312,6 +322,23 @@ def bench_recon(out: List[str]):
         wall = time.perf_counter() - t0
         out.append(common.row(f"recon/chain-L{n_blocks}/scan", wall * 1e6,
                               derived(reports, wall, n_blocks)))
+
+    # data-parallel calibration: the L6 chain again, streams sharded over
+    # the mesh's data axes (ROADMAP §Distributed calibration)
+    from repro.launch.mesh import (axis_size, dp_axes, make_debug_mesh,
+                                   make_flat_mesh)
+    n_dev = jax.device_count()
+    mesh = make_debug_mesh() if n_dev >= 8 else make_flat_mesh(n_dev)
+    blocks = common.make_block_chain(6)
+    rec.reset_engine_stats()
+    rec.clear_engine_cache()
+    t0 = time.perf_counter()
+    _, _, reports = quantize_blocks(blocks, recipe, x, mesh=mesh)
+    wall = time.perf_counter() - t0
+    out.append(common.row(
+        "recon/sharded/scan", wall * 1e6,
+        derived(reports, wall, 6)
+        + f";devices={n_dev};dp={axis_size(mesh, dp_axes(mesh))}"))
 
 
 def bench_alloc(out: List[str]):

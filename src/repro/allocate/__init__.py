@@ -29,11 +29,13 @@ from repro.allocate.solve import (Allocation, Budget,  # noqa: F401
 def auto_allocate(blocks, recipe, x0, budget: Budget, *,
                   bits: Sequence[int] = DEFAULT_BITS,
                   objective: str = "combined", solver: str = "auto",
-                  name: Optional[str] = None) -> AllocationReport:
+                  name: Optional[str] = None, mesh=None) -> AllocationReport:
     """Probe every site, solve the budget, return the report (rules +
     accounting). The caller applies ``report.rules()`` to its recipe and
-    passes ``report.meta()`` to ``quantize_blocks`` for resume validation."""
-    probe = probe_blocks(blocks, recipe, x0, bits=bits)
+    passes ``report.meta()`` to ``quantize_blocks`` for resume validation.
+    ``mesh`` shards the probe pass's calibration stream over the data axes
+    (see ``probe_blocks``)."""
+    probe = probe_blocks(blocks, recipe, x0, bits=bits, mesh=mesh)
     alloc = solve_allocation(probe, budget, objective=objective,
                              solver=solver)
     return AllocationReport.build(probe, alloc, name=name)

@@ -174,13 +174,19 @@ def _fisher_proxy(dw: jax.Array, m2: Optional[jax.Array]) -> float:
 
 def probe_blocks(blocks: Sequence[rec.BlockHandle], recipe: QuantRecipe,
                  x0: jax.Array, bits: Sequence[int] = DEFAULT_BITS,
-                 ) -> ProbeResult:
+                 mesh=None) -> ProbeResult:
     """Score every site of every block at each candidate bit-width.
 
     Runs on the full-precision stream (probing happens before any site is
     finalized): block b's probe input is the teacher output of block b-1.
     Per-site rules in ``recipe`` shape the probe configs (granularity,
     symmetry, observer) — only ``bits`` is swept.
+
+    ``mesh``: optional data-parallel mesh — the fp stream is sharded over
+    the data axes on the leading sample axis exactly like the recon entry
+    points, and the probe pass stays compile-flat (one probe step per
+    (apply_key, bits) regardless of the mesh; the block-output MSE is a mean
+    over the global batch, so it psums automatically under jit).
     """
     stats0 = dataclasses.replace(rec.engine_stats())
     t0 = time.time()
@@ -188,11 +194,15 @@ def probe_blocks(blocks: Sequence[rec.BlockHandle], recipe: QuantRecipe,
     scores: Dict[str, Dict[int, SiteScore]] = {}
     probe_cache: Dict[Any, Any] = {}
 
+    if mesh is not None:
+        from repro.launch.sharding import stream_sharding
+        x0 = jax.device_put(x0, stream_sharding(mesh, x0.shape[0]))
+
     with rec.engine_scope():
         x = x0
         for bi, block in enumerate(blocks):
             cascade = float(len(blocks) - bi)
-            y_fp = rec.probe_teacher(block, recipe)(block.params, x)
+            y_fp = rec.probe_teacher(block, recipe, mesh)(block.params, x)
             plans = rec.site_plans(block, recipe)
             canon = rec._canon_names(block)
 

@@ -191,7 +191,9 @@ class PTQCheckpointer:
         }
         meta = {
             "next_block": next_block,
-            "reports": [dataclasses.asdict(r) for r in reports],
+            # BlockReport.to_json keeps the loss/mse trajectories (JSON-safe
+            # float lists) — plain asdict would hand json.dump device arrays
+            "reports": [r.to_json() for r in reports],
             "plans": plans or [],
             "engine": engine,
             "allocation": allocation,
@@ -231,11 +233,10 @@ class PTQCheckpointer:
                     f"{_alloc_tag(saved_alloc)}) but the current recipe "
                     f"resolves to {now}; restart with matching rules "
                     "or a fresh checkpoint dir")
-        # tolerate report-schema drift across releases: unknown keys from a
-        # newer writer are dropped, missing keys fall back to field defaults
-        known = {f.name for f in dataclasses.fields(BlockReport)}
-        reports = [BlockReport(**{k: v for k, v in r.items() if k in known})
-                   for r in meta["reports"]]
+        # BlockReport.from_json tolerates report-schema drift across
+        # releases: unknown keys from a newer writer are dropped, missing
+        # keys fall back to field defaults
+        reports = [BlockReport.from_json(r) for r in meta["reports"]]
         finalized = [jax.tree.map(jnp.asarray, f) for f in tree["finalized"]]
         astates = jax.tree.map(jnp.asarray, tree["astates"])
         return (meta["next_block"], finalized, astates, reports,

@@ -121,10 +121,21 @@ class QuantCtx:
     def _deploy_matmul(self, name: str, x: jax.Array, qt: QTensor,
                        batch_dims: int) -> jax.Array:
         """Serving-path matmul: every deploy-mode QTensor site dispatches
-        through ``kernels/ops.qtensor_matmul`` under the backend policy."""
+        through ``kernels/ops.qtensor_matmul`` under the backend policy.
+
+        Any 2-D site with a trained 8-bit LSQ state hands the kernel the
+        snapped integer activation grid (``lsq.deploy_astate``), not just
+        the unpacked-W8 sites: W8A8 runs the true-integer kernel, W4A8 (and
+        odd-shape sub-8-bit weights) fake-quantize activations on that same
+        grid in front of the dequant kernel. Before, packed/sub-8-bit sites
+        fell back to ``_act``'s training-time ``lsq.apply`` — close, but a
+        different (un-snapped β) grid than the integer path, and the kernel
+        API itself dropped ``a_state`` outright for them — so serving
+        numerics now use one deploy grid for every activation-quantized
+        site regardless of weight layout."""
         from repro.kernels import ops as kops
         a_state = None
-        if batch_dims == 0 and not qt.packed and qt.bits == 8:
+        if batch_dims == 0:
             plan = self._plan(name)
             if (plan is not None and plan.act is not None
                     and name in self.astates):

@@ -41,11 +41,26 @@ Execution model (the hot path — this loop runs iters × layers times):
       ``EngineStats.probe_compiles`` so tests can assert the probe pass
       compiles O(distinct apply_keys) steps, not O(sites).
 
-Distribution: all jitted functions here are pjit-compatible — calibration
-tensors carry a leading sample axis that the caller shards over the data mesh
-axis; gradients reduce via the standard pjit psum. Per-block state is
-checkpointed (see repro/checkpoint) so a failed node restarts at the block
-boundary; see quantize_blocks(resume_dir=...).
+Distribution (data-parallel calibration): pass ``mesh=`` to
+``reconstruct_block`` / ``quantize_blocks`` (and ``probe_blocks`` in
+repro.allocate). The engine then places the calibration streams — ``x_q``,
+``y_fp`` and the optional per-sample loss weights — with the leading sample
+axis sharded over the mesh's data axes (``launch/sharding.stream_sharding``;
+sample counts that don't divide the data-parallel size degrade to
+replication), constrains the gathered minibatches to the same spec inside
+the scanned step, and replicates the rounding/Adam/LSQ carry states and the
+minibatch schedule (``NamedSharding(mesh, P())``). The loss/MSE reductions
+are means over the *global* batch, so under jit the rounding-state gradients
+all-reduce (psum) over the data axes automatically and every device steps
+identical replicated states. The mesh is part of the engine cache key:
+blocks still compile once per ``apply_key``, and the sharded trajectory
+reproduces the unsharded one (both pinned in tests/test_sharded_recon.py).
+``sample_weight`` consumes ``data/pipeline.assemble_global_batch``'s loss
+weight: samples from dropped host shards carry weight 0 and the objective
+becomes the weighted global-batch mean, so gradient magnitude stays unbiased
+under straggler dropping. Per-block state is checkpointed (see
+repro/checkpoint) so a failed node restarts at the block boundary; see
+quantize_blocks(resume_dir=...).
 """
 from __future__ import annotations
 
@@ -59,6 +74,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import lsq
 from repro.core import paths as pth
@@ -101,6 +117,10 @@ class BlockHandle:
     apply_key: Optional[Any] = None
 
 
+def _empty_curve() -> np.ndarray:
+    return np.zeros((0,), np.float32)
+
+
 @dataclasses.dataclass
 class BlockReport:
     name: str
@@ -110,6 +130,31 @@ class BlockReport:
     seconds: float
     engine: str = "scan"
     steps_per_s: float = 0.0
+    # Per-step loss/MSE trajectories (stacked scan outputs). Real fields —
+    # not stapled-on attributes — so report serialization round-trips them.
+    loss_curve: Any = dataclasses.field(default_factory=_empty_curve)
+    mse_curve: Any = dataclasses.field(default_factory=_empty_curve)
+
+    _CURVES = ("loss_curve", "mse_curve")
+
+    def to_json(self) -> dict:
+        """JSON-safe dict: trajectories as float lists (checkpoint meta)."""
+        d = dataclasses.asdict(self)
+        for k in self._CURVES:
+            d[k] = np.asarray(getattr(self, k), np.float32).tolist()
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "BlockReport":
+        """Inverse of ``to_json``, tolerating report-schema drift: unknown
+        keys from a newer writer are dropped, missing keys fall back to the
+        field defaults."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        kept = {k: v for k, v in d.items() if k in known}
+        for k in cls._CURVES:
+            if k in kept:
+                kept[k] = np.asarray(kept[k], np.float32)
+        return cls(**kept)
 
 
 # ------------------------------------------------------------- engine stats
@@ -229,24 +274,36 @@ def _make_step_fn(apply_fn: Callable, recipe: QuantRecipe,
     heterogeneous plans (method, bits, lr): each site's rounding state is
     updated by its own method, all inside one tree-wide Adam update whose
     per-leaf lr_scale carries the rule-overridden learning rates.
+
+    ``sw`` (optional, leading-sample-axis weights from
+    ``assemble_global_batch``) turns the MSE into a weighted global-batch
+    mean — dropped-shard samples carry weight 0, so the straggler policy's
+    B / weight.sum() loss rescale happens here. ``sw=None`` keeps the plain
+    ``jnp.mean`` bit-identical to the recorded trajectories.
     """
 
-    def loss_fn(params, wstates, astates, x_q, y_fp, step, key, salts):
+    def loss_fn(params, wstates, astates, x_q, y_fp, sw, step, key, salts):
         ctx = QuantCtx(mode="recon", recipe=recipe, wstates=wstates,
                        astates=astates, key=key, plans=plans, site_salts=salts)
         y = apply_fn(params, x_q, ctx)
-        mse = jnp.mean(jnp.square(y.astype(jnp.float32) - y_fp.astype(jnp.float32)))
+        se = jnp.square(y.astype(jnp.float32) - y_fp.astype(jnp.float32))
+        if sw is None:
+            mse = jnp.mean(se)
+        else:
+            per = jnp.mean(se.reshape(se.shape[0], -1), axis=1)
+            w = sw.astype(jnp.float32)
+            mse = jnp.sum(per * w) / jnp.maximum(jnp.sum(w), 1e-9)
         reg = jnp.float32(0.0)
         for name, st in wstates.items():
             plan = plans[name]
             reg = reg + plan.method.loss_extra(st, plan.weight, step, recipe)
         return mse + reg, mse
 
-    def step_fn(params, wstates, astates, wopt, aopt, x_q, y_fp, step, key,
-                salts):
+    def step_fn(params, wstates, astates, wopt, aopt, x_q, y_fp, sw, step,
+                key, salts):
         (loss, mse), (gw, ga) = jax.value_and_grad(loss_fn, argnums=(1, 2),
                                                    has_aux=True)(
-            params, wstates, astates, x_q, y_fp, step, key, salts)
+            params, wstates, astates, x_q, y_fp, sw, step, key, salts)
         wmask, amask = _trainable_mask(wstates, astates, plans)
         gw = _apply_mask(gw, wmask)
         w_lr = {k: jax.tree.map(lambda _: plans[k].lr, v)
@@ -358,18 +415,29 @@ def _batch_schedule(key, iters: int, n: int, bs: int):
 
 
 def _engine_key(block: BlockHandle, recipe: QuantRecipe,
-                plans: Dict[str, SitePlan], canon: Dict[str, str]):
+                plans: Dict[str, SitePlan], canon: Dict[str, str],
+                mesh=None):
     akey = (block.apply_key if block.apply_key is not None
             else ("~obj", id(block.apply)))
     sites = tuple(sorted(
         (canon[rn], s.kind, s.batch_dims, plans[rn].cache_key())
         for rn, s in block.sites.items()))
-    return (akey, sites, recipe)
+    # run_chunk closures bake the mesh (minibatch sharding constraints), so
+    # the same block under a different mesh needs a distinct engine
+    return (akey, sites, recipe, mesh)
+
+
+def _constrain_stream(x, mesh):
+    """Pin a leading-sample-axis tensor to the data-parallel stream spec
+    (inside a trace, so the shape is static)."""
+    from repro.launch.sharding import stream_sharding
+    return jax.lax.with_sharding_constraint(x, stream_sharding(mesh,
+                                                               x.shape[0]))
 
 
 def _build_engine(block: BlockHandle, recipe: QuantRecipe,
                   plans_c: Dict[str, SitePlan],
-                  mapping: Dict[str, str]) -> _Engine:
+                  mapping: Dict[str, str], mesh=None) -> _Engine:
     block_apply = block.apply
 
     def apply_c(p, x, ctx):
@@ -379,20 +447,34 @@ def _build_engine(block: BlockHandle, recipe: QuantRecipe,
     step = _make_step_fn(apply_c, recipe, plans_c, a_opt_cfg)
 
     def run_chunk(params, wstates, astates, wopt, aopt, x_q, y_fp,
-                  idx, k2s, steps, salts):
+                  idx, k2s, steps, salts, sweight):
         _STATS.step_compiles += 1
+        if mesh is not None:
+            # carried states are replicated; the gather below re-shards the
+            # minibatch over the data axes so the per-step loss is a mean
+            # over the global batch (gradients psum automatically)
+            from repro.launch.sharding import replicated
+            repl = replicated(mesh)
+            wstates, astates, wopt, aopt = jax.tree.map(
+                lambda a: jax.lax.with_sharding_constraint(a, repl),
+                (wstates, astates, wopt, aopt))
 
         def body(carry, xs):
             ws, as_, wo, ao = carry
             if idx is None:
                 k2, stp = xs
-                xb, yb = x_q, y_fp
+                xb, yb, wb = x_q, y_fp, sweight
             else:
                 ix, k2, stp = xs
                 xb = jnp.take(x_q, ix, axis=0)
                 yb = jnp.take(y_fp, ix, axis=0)
+                wb = None if sweight is None else jnp.take(sweight, ix,
+                                                           axis=0)
+                if mesh is not None:
+                    xb = _constrain_stream(xb, mesh)
+                    yb = _constrain_stream(yb, mesh)
             ws, as_, wo, ao, loss, mse = step(params, ws, as_, wo, ao,
-                                              xb, yb, stp, k2, salts)
+                                              xb, yb, wb, stp, k2, salts)
             return (ws, as_, wo, ao), (loss, mse)
 
         xs = (k2s, steps) if idx is None else (idx, k2s, steps)
@@ -431,16 +513,18 @@ def _build_engine(block: BlockHandle, recipe: QuantRecipe,
 
 
 def _get_engine(block: BlockHandle, recipe: QuantRecipe,
-                plans: Dict[str, SitePlan]) -> Tuple[_Engine, Dict[str, str]]:
+                plans: Dict[str, SitePlan], mesh=None
+                ) -> Tuple[_Engine, Dict[str, str]]:
     canon = _canon_names(block)
-    key = _engine_key(block, recipe, plans, canon)
+    key = _engine_key(block, recipe, plans, canon, mesh)
     eng = _ENGINE_CACHE.get(key)
     if eng is not None:
         _STATS.engine_hits += 1
         _ENGINE_CACHE.move_to_end(key)
         return eng, canon
     eng = _build_engine(block, recipe,
-                        {canon[rn]: plans[rn] for rn in block.sites}, canon)
+                        {canon[rn]: plans[rn] for rn in block.sites}, canon,
+                        mesh)
     _STATS.engine_builds += 1
     _ENGINE_CACHE[key] = eng
     if _SCOPE_STACK:
@@ -461,18 +545,31 @@ def _dealias(*trees):
 
 
 # ----------------------------------------------------------------- engines
+def _place_sharded(mesh, x_q, y_fp, sample_weight, state_trees):
+    """Device placement for a sharded run: calibration streams over the data
+    axes on the leading sample axis, everything the scan carries replicated.
+    All arrays end up committed to the same mesh so jitted calls never mix
+    device sets."""
+    from repro.launch.sharding import replicated, stream_sharding
+    stream = stream_sharding(mesh, x_q.shape[0])
+    x_q = jax.device_put(x_q, stream)
+    y_fp = jax.device_put(y_fp, stream)
+    if sample_weight is not None:
+        sample_weight = jax.device_put(sample_weight, stream)
+    state_trees = jax.device_put(state_trees, replicated(mesh))
+    return x_q, y_fp, sample_weight, state_trees
+
+
 def _run_scan(block: BlockHandle, recipe: QuantRecipe,
               plans: Dict[str, SitePlan], wstates, astates_all, x_q, y_fp,
-              key, chunk: int):
+              key, chunk: int, mesh=None, sample_weight=None):
     """Scan-fused engine: returns (wstates, astates_all, err0, err1,
     loop_seconds, loss_curve, mse_curve)."""
-    eng, canon = _get_engine(block, recipe, plans)
+    eng, canon = _get_engine(block, recipe, plans, mesh)
     inv = {c: r for r, c in canon.items()}
     c_w = {canon[r]: v for r, v in wstates.items()}
     c_a = {canon[r]: astates_all[r] for r in block.sites if r in astates_all}
     salts = {canon[r]: _salt(r) for r in block.sites}
-
-    err0 = float(eng.recon_err(block.params, c_w, c_a, x_q, y_fp))
 
     a_opt_cfg = AdamConfig(lr=recipe.lr_lsq)
     wopt = adam_init(c_w, _W_BASE_CFG)
@@ -481,17 +578,28 @@ def _run_scan(block: BlockHandle, recipe: QuantRecipe,
 
     n = x_q.shape[0]
     bs = min(recipe.batch_size, n)
-    t0 = time.time()
     idx, k2s = _batch_schedule(key, recipe.iters, n, bs)
     steps = jnp.arange(recipe.iters, dtype=jnp.int32)
+    if mesh is not None:
+        x_q, y_fp, sample_weight, placed = _place_sharded(
+            mesh, x_q, y_fp, sample_weight,
+            (c_w, c_a, wopt, aopt, salts, idx, k2s, steps))
+        c_w, c_a, wopt, aopt, salts, idx, k2s, steps = placed
+
+    # err0 runs on the (possibly mesh-placed) states but outside the timed
+    # window: loop_s / steps_per_s measure the optimization loop itself
+    err0 = float(eng.recon_err(block.params, c_w, c_a, x_q, y_fp))
+
     chunk = max(1, min(chunk, recipe.iters))
+    t0 = time.time()
     losses, mses = [], []
     it = 0
     while it < recipe.iters:
         sl = slice(it, it + min(chunk, recipe.iters - it))
         c_w, c_a, wopt, aopt, lo, ms = eng.run_chunk(
             block.params, c_w, c_a, wopt, aopt, x_q, y_fp,
-            None if idx is None else idx[sl], k2s[sl], steps[sl], salts)
+            None if idx is None else idx[sl], k2s[sl], steps[sl], salts,
+            sample_weight)
         losses.append(lo)
         mses.append(ms)
         it = sl.stop
@@ -511,7 +619,8 @@ def _run_scan(block: BlockHandle, recipe: QuantRecipe,
 def reconstruct_block(block: BlockHandle, recipe: QuantRecipe, x_q: jax.Array,
                       y_fp: jax.Array, key: jax.Array,
                       astates: Optional[Dict[str, Any]] = None, *,
-                      chunk: int = DEFAULT_CHUNK,
+                      chunk: int = DEFAULT_CHUNK, mesh=None,
+                      sample_weight: Optional[jax.Array] = None,
                       ) -> Tuple[Dict[str, Any], Dict[str, Any], BlockReport]:
     """Optimize rounding (+LSQ) states for one block. Returns final states.
 
@@ -521,6 +630,14 @@ def reconstruct_block(block: BlockHandle, recipe: QuantRecipe, x_q: jax.Array,
     report carries the measured loop throughput (``steps_per_s``) and the
     loss/mse trajectories (``rep.loss_curve`` / ``rep.mse_curve``, stacked
     device arrays).
+
+    ``mesh``: optional ``jax.sharding.Mesh`` — calibration tensors are
+    sharded over the mesh's data axes on the leading sample axis and the
+    optimization states replicated (see the module docstring; the RNG stream
+    and trajectories match the unsharded run). ``sample_weight``: optional
+    (N,) per-sample loss weights (``assemble_global_batch``), consumed as a
+    weighted global-batch mean; None keeps the plain mean bit-identical to
+    the recorded trajectories.
     """
     t0 = time.time()
     plans = site_plans(block, recipe)
@@ -528,14 +645,13 @@ def reconstruct_block(block: BlockHandle, recipe: QuantRecipe, x_q: jax.Array,
     astates = astates if astates is not None else init_astates(block, recipe, x_q)
 
     wstates, astates, err0, err1, loop_s, loss_curve, mse_curve = _run_scan(
-        block, recipe, plans, wstates, astates, x_q, y_fp, key, chunk)
+        block, recipe, plans, wstates, astates, x_q, y_fp, key, chunk,
+        mesh, sample_weight)
 
-    rep = BlockReport(block.name, err0, err1, recipe.iters,
-                      time.time() - t0,
-                      steps_per_s=recipe.iters / max(loop_s, 1e-9))
-    rep.loss_curve = loss_curve
-    rep.mse_curve = mse_curve
-    return wstates, astates, rep
+    return wstates, astates, BlockReport(
+        block.name, err0, err1, recipe.iters, time.time() - t0,
+        steps_per_s=recipe.iters / max(loop_s, 1e-9),
+        loss_curve=loss_curve, mse_curve=mse_curve)
 
 
 def finalize_block(block: BlockHandle, recipe: QuantRecipe, wstates,
@@ -556,13 +672,15 @@ def finalize_block(block: BlockHandle, recipe: QuantRecipe, wstates,
 
 
 # --------------------------------------------------------------- probe entry
-def probe_teacher(block: BlockHandle, recipe: QuantRecipe):
+def probe_teacher(block: BlockHandle, recipe: QuantRecipe, mesh=None):
     """Compiled teacher for sensitivity-probe passes (repro.allocate).
 
     Shares the engine cache, so the L structurally identical blocks of a
     transformer compile one teacher. Call inside ``engine_scope()`` — probe
-    passes build engines whose closures pin per-call constants."""
-    eng, _ = _get_engine(block, recipe, site_plans(block, recipe))
+    passes build engines whose closures pin per-call constants. ``mesh``
+    keys the engine like the recon entry points, so a sharded probe pass
+    stays compile-flat under the same cache."""
+    eng, _ = _get_engine(block, recipe, site_plans(block, recipe), mesh)
     return eng.teacher
 
 
@@ -611,6 +729,8 @@ def quantize_blocks(blocks: List[BlockHandle], recipe: QuantRecipe,
                     progress: Optional[Callable[[str], None]] = None, *,
                     chunk: int = DEFAULT_CHUNK,
                     allocation: Optional[dict] = None,
+                    mesh=None,
+                    sample_weight: Optional[jax.Array] = None,
                     ) -> Tuple[List[Any], Dict[str, Any], List[BlockReport]]:
     """Sequentially quantize a chain of blocks (the paper's full procedure).
 
@@ -624,21 +744,34 @@ def quantize_blocks(blocks: List[BlockHandle], recipe: QuantRecipe,
     recipe's rules (``AllocationReport.meta()`` from repro.allocate). It is
     recorded in every per-block checkpoint; a resume whose recipe or
     allocation no longer matches fails loudly, naming the allocation.
+
+    ``mesh``: optional ``jax.sharding.Mesh`` for data-parallel calibration —
+    the activation streams (x_fp / x_q / teacher outputs) are sharded over
+    the mesh's data axes on the leading sample axis, optimization states
+    replicated; trajectories match the unsharded run (module docstring).
+    ``sample_weight``: optional (N,) per-sample loss weights aligned with
+    ``x0``'s leading axis (``assemble_global_batch``'s straggler mask).
     """
     with engine_scope():
         # engines built here are released on exit: their apply closures pin
         # per-call constants and their apply_key tokens can never hit again
         return _quantize_blocks(blocks, recipe, x0, key, as_qtensor,
-                                checkpoint_dir, progress, chunk, allocation)
+                                checkpoint_dir, progress, chunk, allocation,
+                                mesh, sample_weight)
 
 
 def _quantize_blocks(blocks, recipe, x0, key, as_qtensor, checkpoint_dir,
-                     progress, chunk, allocation):
+                     progress, chunk, allocation, mesh=None,
+                     sample_weight=None):
     key = key if key is not None else jax.random.key(recipe.seed)
     ckpt = None
     if checkpoint_dir is not None:
         from repro.checkpoint.checkpoint import PTQCheckpointer
         ckpt = PTQCheckpointer(checkpoint_dir)
+
+    if mesh is not None:
+        from repro.launch.sharding import stream_sharding
+        x0 = jax.device_put(x0, stream_sharding(mesh, x0.shape[0]))
 
     x_fp = x0
     x_q = x0
@@ -651,6 +784,15 @@ def _quantize_blocks(blocks, recipe, x0, key, as_qtensor, checkpoint_dir,
         resumed = ckpt.load(blocks, recipe, allocation=allocation)
         if resumed is not None:
             start, finalized, astates, reports, x_fp, x_q = resumed
+            if mesh is not None:
+                # checkpointed streams come back as single-device arrays;
+                # re-place them or the resumed run loses the sharding (and
+                # recompiles every engine for the replicated layout)
+                from repro.launch.sharding import stream_sharding
+                x_fp = jax.device_put(x_fp,
+                                      stream_sharding(mesh, x_fp.shape[0]))
+                x_q = jax.device_put(x_q,
+                                     stream_sharding(mesh, x_q.shape[0]))
 
     def advance_student(block, eng, canon, params, x):
         a_c = {canon[r]: astates[r] for r in block.sites if r in astates}
@@ -658,7 +800,8 @@ def _quantize_blocks(blocks, recipe, x0, key, as_qtensor, checkpoint_dir,
 
     for i in range(len(blocks)):
         block = blocks[i]
-        eng, canon = _get_engine(block, recipe, site_plans(block, recipe))
+        eng, canon = _get_engine(block, recipe, site_plans(block, recipe),
+                                 mesh)
         y_fp = eng.teacher(block.params, x_fp)
         if i < start:
             # replay streams from checkpointed finalized params
@@ -672,11 +815,17 @@ def _quantize_blocks(blocks, recipe, x0, key, as_qtensor, checkpoint_dir,
             wstates_all: Dict[str, Any] = {}
             for name, site, sub, x_site in _explode_layerwise(block, recipe,
                                                               x_q):
-                sub_eng, _ = _get_engine(sub, recipe, site_plans(sub, recipe))
+                sub_eng, _ = _get_engine(sub, recipe, site_plans(sub, recipe),
+                                         mesh)
                 y_site = sub_eng.teacher(sub.params, x_site)
+                # fold the site's identity into the key: sibling sites must
+                # draw independent minibatch schedules (sharing bkey gave
+                # every site of a block the same gather indices)
+                skey = jax.random.fold_in(bkey, _salt(name))
                 ws, a_sub, rep = reconstruct_block(sub, recipe, x_site, y_site,
-                                                   bkey, astates=dict(astates),
-                                                   chunk=chunk)
+                                                   skey, astates=dict(astates),
+                                                   chunk=chunk, mesh=mesh,
+                                                   sample_weight=sample_weight)
                 astates.update(a_sub)
                 wstates_all[name] = ws[name]
                 reports.append(rep)
@@ -684,7 +833,8 @@ def _quantize_blocks(blocks, recipe, x0, key, as_qtensor, checkpoint_dir,
         else:
             wstates, astates, rep = reconstruct_block(block, recipe, x_q, y_fp,
                                                       bkey, astates=astates,
-                                                      chunk=chunk)
+                                                      chunk=chunk, mesh=mesh,
+                                                      sample_weight=sample_weight)
             reports.append(rep)
 
         new_params = finalize_block(block, recipe, wstates, as_qtensor=as_qtensor)

@@ -46,7 +46,14 @@ class SyntheticTokens:
     def batch(self, step: int, batch_size: int, host: int = 0,
               n_hosts: int = 1) -> Dict[str, jax.Array]:
         """Deterministic global batch shard for (step, host)."""
-        assert batch_size % n_hosts == 0
+        if n_hosts < 1 or not 0 <= host < n_hosts:
+            raise ValueError(
+                f"host index {host} out of range for n_hosts={n_hosts}")
+        if batch_size % n_hosts:
+            raise ValueError(
+                f"global batch_size={batch_size} does not divide over "
+                f"n_hosts={n_hosts} (per-host shards must be equal-sized; "
+                f"got remainder {batch_size % n_hosts})")
         local = batch_size // n_hosts
         k = _key(self.seed, step, host)
         ka, kb, kt, kn = jax.random.split(k, 4)
@@ -78,6 +85,35 @@ class CalibrationSet:
         toks = jnp.concatenate(batches, axis=0)[:n_samples]
         return CalibrationSet(tokens=toks)
 
+    @staticmethod
+    def build_sharded(source: SyntheticTokens, n_samples: int, n_hosts: int,
+                      policy: Optional["StragglerPolicy"] = None,
+                      drop_hosts: Sequence[int] = (),
+                      ) -> Tuple["CalibrationSet", jax.Array]:
+        """Per-host calibration assembly (the multi-host PTQ entry).
+
+        Each host materializes exactly its shard — ``batch(step, host,
+        n_hosts)`` is a pure function, so no host ever sees another host's
+        data — and the shards combine through the straggler policy. Returns
+        ``(calibration_set, weight)`` where ``weight`` is the (N,) per-sample
+        loss mask from ``assemble_global_batch``: samples from dropped hosts
+        are zero-filled and carry weight 0, and the reconstruction objective
+        consumes the mask as a weighted global-batch mean (gradient magnitude
+        stays unbiased). ``drop_hosts`` simulates deadline misses
+        (single-process smoke/tests; real deployments pass None for hosts
+        that missed the fetch deadline).
+        """
+        shards: List[Optional[Dict[str, np.ndarray]]] = []
+        for h in range(n_hosts):
+            if h in drop_hosts:
+                shards.append(None)
+                continue
+            shard = source.batch(10_000, n_samples, host=h, n_hosts=n_hosts)
+            shards.append({k: np.asarray(v) for k, v in shard.items()})
+        batch, weight = assemble_global_batch(
+            shards, policy or StragglerPolicy())
+        return CalibrationSet(tokens=batch["tokens"]), weight
+
     def __len__(self):
         return int(self.tokens.shape[0])
 
@@ -107,7 +143,24 @@ def assemble_global_batch(shards: Sequence[Optional[Dict[str, np.ndarray]]],
     if frac < policy.min_fraction:
         raise TimeoutError(
             f"only {frac:.0%} of shards arrived (< {policy.min_fraction:.0%})")
-    proto = present[0]
+    proto_host = next(h for h, s in enumerate(shards) if s is not None)
+    proto = shards[proto_host]
+    # every present shard must agree with the prototype, keys and shapes
+    # both — a silent mismatch would zero-fill or mis-concatenate a live
+    # host's data
+    for h, s in enumerate(shards):
+        if s is None:
+            continue
+        if set(s) != set(proto):
+            raise ValueError(
+                f"host {h} shard keys {sorted(s)} do not match host "
+                f"{proto_host}'s {sorted(proto)}")
+        for k in proto:
+            if np.shape(s[k]) != np.shape(proto[k]):
+                raise ValueError(
+                    f"host {h} shard {k!r} has shape {np.shape(s[k])} but "
+                    f"host {proto_host} has {np.shape(proto[k])}; per-host "
+                    "shards must be equal-sized")
     out: Dict[str, List[np.ndarray]] = {k: [] for k in proto}
     weights = []
     for s in shards:

@@ -77,11 +77,28 @@ def flexround_fake_quant(w, state, qcfg, *, interpret: Optional[bool] = None,
                            qmax=qcfg.qmax, interpret=interpret)
 
 
+def _snap_codes(x2, a_scale, a_zero):
+    """Unsigned [0, 255] activation codes on the snapped LSQ deploy grid
+    (``lsq.deploy_astate``) — the single source of truth for deploy-mode
+    activation quantization; every kernel path derives from it."""
+    return jnp.clip(jnp.round(x2.astype(jnp.float32) / a_scale) + a_zero,
+                    0, 255)
+
+
 def _lsq_int8_codes(x2, a_scale, a_zero):
     """Quantize activations to signed int8 codes on the [0, 255] grid."""
-    a_q = jnp.clip(jnp.round(x2.astype(jnp.float32) / a_scale) + a_zero,
-                   0, 255) - 128  # shift to signed
-    return a_q.astype(jnp.int8)
+    return (_snap_codes(x2, a_scale, a_zero) - 128).astype(jnp.int8)
+
+
+def _static_act_quant(x2, a_state):
+    """LSQ fake-quant of activations on the snapped deploy grid: the same
+    [0, 255] integer codes the W8A8 kernel consumes, dequantized back to
+    float for the dequant-matmul kernels. This is what keeps W4A8 /
+    odd-shape sub-8-bit serving on one deploy grid instead of silently
+    dropping the activation quantizer."""
+    a_scale, a_zero = a_state
+    return (a_scale * (_snap_codes(x2, a_scale, a_zero)
+                       - a_zero)).astype(x2.dtype)
 
 
 def _matmul_2d(x2, qt: QTensor, a_state, backend: str, interpret: bool):
@@ -89,6 +106,12 @@ def _matmul_2d(x2, qt: QTensor, a_state, backend: str, interpret: bool):
     scale = _row(qt.scale, N)
     zero = _row(qt.zero, N)
     if qt.packed and qt.pack_axis == 0:
+        # W4A8: fake-quant the activations on the static grid, then run the
+        # packed dequant kernel (no int4xint8 MXU path — the weight codes
+        # are unpacked in VMEM anyway, so the activation grid is the only
+        # thing the integer path would add)
+        if a_state is not None:
+            x2 = _static_act_quant(x2, a_state)
         if backend == "xla":
             return ref.dequant_matmul_w4_ref(x2, qt.codes, scale, zero)
         return dequant_matmul_w4(x2, qt.codes, scale, zero,
@@ -109,6 +132,10 @@ def _matmul_2d(x2, qt: QTensor, a_state, backend: str, interpret: bool):
             out = qmatmul_int8(a_q, b_q, a_scale, a_zero - 128.0, scale,
                                b_zero=b_zero, interpret=interpret)
         return out
+    if a_state is not None:
+        # sub-8-bit weights that could not nibble-pack: same static
+        # activation grid in front of the weight-only kernel
+        x2 = _static_act_quant(x2, a_state)
     if backend == "xla":
         return ref.dequant_matmul_w8_ref(x2, codes, scale, zero)
     return dequant_matmul_w8(x2, codes, scale, zero, interpret=interpret)
@@ -130,13 +157,15 @@ def _matmul_batched(x3, qt: QTensor, backend: str, interpret: bool):
 def qtensor_matmul(x, qt: QTensor, *, a_state=None, backend: str = "auto",
                    interpret: Optional[bool] = None):
     """x @ dequant(qt) — the deploy-mode serving matmul for every QTensor
-    layout:
+    layout. ``a_state`` is the static activation grid ``(a_scale, a_zero)``
+    from ``lsq.deploy_astate`` (a_zero the unsigned zero point in [0, 255])
+    and is honored on *every* 2-D path, never silently dropped:
 
-    - 4-bit K-packed weights -> W4A16 dequant-matmul kernel.
-    - 8-bit weights + a_state (activation int8 params (a_scale, a_zero) with
-      a_zero the unsigned zero point in [0, 255]) -> W8A8 integer kernel.
+    - 4-bit K-packed weights -> W4A16 dequant-matmul kernel; with a_state
+      the activations are first fake-quantized on the static grid (W4A8).
+    - 8-bit weights + a_state -> W8A8 true-integer kernel.
     - 8-bit weights, no a_state (and <=4-bit weights that could not pack)
-      -> W8A16 dequant-matmul kernel.
+      -> W8A16 dequant-matmul kernel (a_state again fake-quantizes first).
     - stacked expert weights (E, K, N) with x (..., E, n, K) -> grid-extended
       per-expert dequant-matmul (activations pre-quantized by the caller).
     """

@@ -36,6 +36,12 @@ def make_debug_mesh(*, multi_pod: bool = False):
     return _make_mesh(shape, axes)
 
 
+def make_flat_mesh(n_devices: int):
+    """All-device (n, 1) data-parallel mesh — the fallback for benchmarks /
+    smoke runs on hosts that don't expose the debug mesh's 8 devices."""
+    return _make_mesh((n_devices, 1), ("data", "model"))
+
+
 def dp_axes(mesh) -> Tuple[str, ...]:
     """Mesh axes that act as data/FSDP parallel dims."""
     names = mesh.axis_names

@@ -23,6 +23,16 @@ and quantize in one invocation. The allocation is persisted to --resume-dir
 (allocation.json) and stamped into every per-block checkpoint, so a resume
 under a different allocation fails loudly.
 
+Distributed calibration (--mesh): reconstruction runs data-parallel over the
+mesh — the calibration set is built per-host from the deterministic
+``SyntheticTokens.batch(step, host, n_hosts)`` shards (one simulated host per
+data-parallel slice), assembled under the straggler policy, and its loss
+weight is consumed by the recon objective; calibration/activation streams are
+sharded over the mesh's data axes on the leading sample axis while rounding/
+Adam/LSQ states stay replicated. ``--mesh debug`` needs 8 devices (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU);
+``--mesh production`` expects the 16x16 pod of launch/mesh.py.
+
 Fault tolerance: per-block PTQ checkpoints (--resume-dir) — a preempted run
 resumes at the first unfinished block with identical RNG; resuming under
 different rules fails loudly (per-site plans are recorded in the checkpoint).
@@ -40,6 +50,8 @@ from repro.core.reconstruct import (DEFAULT_CHUNK, engine_stats,
                                     quantize_blocks, reset_engine_stats,
                                     site_plans)
 from repro.data import CalibrationSet, SyntheticTokens
+from repro.launch.mesh import (axis_size, dp_axes, make_debug_mesh,
+                               make_production_mesh)
 from repro.models import build_model
 
 
@@ -92,6 +104,16 @@ def main():
     ap.add_argument("--scan-chunk", type=int, default=DEFAULT_CHUNK,
                     help="optimization steps fused per device dispatch in "
                          "the scanned engine")
+    ap.add_argument("--mesh", default=None, choices=["debug", "production"],
+                    help="run reconstruction data-parallel over a device "
+                         "mesh: calibration built per-host "
+                         "(SyntheticTokens.batch shards + straggler loss "
+                         "weight), streams sharded over the data axes, "
+                         "states replicated. debug = 2x4 (8 devices, force "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8); production = 16x16")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="with --mesh: add the pod axis (pod, data, model)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -111,7 +133,12 @@ def main():
                          batch_size=min(16, args.calib),
                          rules=tuple(args.rule))
     src = SyntheticTokens(vocab=cfg.vocab, seq_len=args.seq, seed=0)
-    cal = CalibrationSet.build(src, args.calib)
+    mesh, sample_weight = None, None
+    if args.mesh is not None:
+        mesh = build_mesh(args.mesh, multi_pod=args.multi_pod)
+        cal, sample_weight = build_sharded_calibration(src, args.calib, mesh)
+    else:
+        cal = CalibrationSet.build(src, args.calib)
     x0, blocks, assemble = model.quant_blocks(params, cal.tokens)
 
     reset_engine_stats()
@@ -119,7 +146,8 @@ def main():
     if args.auto_bits is not None:
         recipe, alloc_meta = apply_auto_bits(
             blocks, recipe, x0, value=args.auto_bits, budget=args.budget,
-            objective=args.alloc_objective, resume_dir=args.resume_dir)
+            objective=args.alloc_objective, resume_dir=args.resume_dir,
+            mesh=mesh)
 
     if recipe.rules:
         overridden = [(n, p.summary()) for b in blocks
@@ -131,7 +159,8 @@ def main():
     finalized, astates, reports = quantize_blocks(
         blocks, recipe, x0, checkpoint_dir=args.resume_dir,
         progress=lambda s: print(s, flush=True),
-        chunk=args.scan_chunk, allocation=alloc_meta)
+        chunk=args.scan_chunk, allocation=alloc_meta,
+        mesh=mesh, sample_weight=sample_weight)
     qparams = assemble(finalized)
 
     stats = engine_stats()
@@ -168,8 +197,48 @@ def main():
                     backend=args.backend)
 
 
+def build_mesh(kind: str, *, multi_pod: bool = False):
+    """--mesh flag -> jax Mesh, with an actionable error when the process
+    does not expose enough devices (the debug mesh is 8 virtual CPU devices
+    in both its single- and multi-pod shapes — (2,4) and (2,2,2))."""
+    need = 8 if kind == "debug" else (512 if multi_pod else 256)
+    have = jax.device_count()
+    if have < need:
+        raise SystemExit(
+            f"--mesh {kind} needs {need} devices but this process sees "
+            f"{have}; on CPU run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+            "(debug mesh) or launch on the real pod")
+    if kind == "debug":
+        return make_debug_mesh(multi_pod=multi_pod)
+    return make_production_mesh(multi_pod=multi_pod)
+
+
+def build_sharded_calibration(src, n_calib: int, mesh):
+    """Per-host calibration for a mesh run: one simulated host per
+    data-parallel slice fetches exactly its ``SyntheticTokens.batch`` shard;
+    the straggler policy assembles them and its loss weight feeds the recon
+    objective. Returns (CalibrationSet, (N,) sample weight)."""
+    n_hosts = axis_size(mesh, dp_axes(mesh))
+    if n_calib % n_hosts:
+        raise SystemExit(
+            f"--calib {n_calib} does not divide over the mesh's "
+            f"{n_hosts} data-parallel hosts; pick a multiple of {n_hosts}")
+    cal, weight = CalibrationSet.build_sharded(src, n_calib, n_hosts)
+    print(f"calibration: {n_calib} samples assembled from {n_hosts} "
+          f"per-host shards (dp axes {dp_axes(mesh)}, "
+          f"weight mass {float(weight.sum()):.0f}/{len(cal)})")
+    if float(weight.sum()) == len(cal):
+        # no host missed the deadline: the weighted mean would equal the
+        # plain mean, but only sample_weight=None keeps the objective on the
+        # exact reduction the recorded trajectories (and the sharded parity
+        # suite) pin — so drop the all-ones mask
+        return cal, None
+    return cal, weight
+
+
 def apply_auto_bits(blocks, recipe, x0, *, value: float, budget: str,
-                    objective: str = "combined", resume_dir=None):
+                    objective: str = "combined", resume_dir=None, mesh=None):
     """Probe -> solve -> append emitted rules. Returns (recipe, alloc_meta).
 
     When ``resume_dir`` holds an ``allocation.json`` from an earlier run the
@@ -192,10 +261,18 @@ def apply_auto_bits(blocks, recipe, x0, *, value: float, budget: str,
                 f"{report.objective!r} but this run requests {want} / "
                 f"{objective!r}; re-run with the original settings or a "
                 "fresh checkpoint dir")
+        have = {n for b in blocks for n in b.sites}
+        stale = sorted(set(report.bits()) - have)
+        if stale:
+            raise ValueError(
+                f"resume dir {resume_dir} holds allocation {report.name!r} "
+                f"for sites this model does not have (e.g. {stale[:3]}); "
+                "its rules would silently match nothing — re-probe with a "
+                "fresh checkpoint dir")
         print(f"reusing recorded allocation from {resume_dir}:")
     else:
         report = auto_allocate(blocks, recipe, x0, Budget(kind, value),
-                               objective=objective)
+                               objective=objective, mesh=mesh)
         if resume_dir is not None:
             report.save(resume_dir)
     print(report.pretty(), flush=True)

@@ -199,6 +199,29 @@ def named(mesh, spec_tree):
                         is_leaf=lambda l: isinstance(l, P))
 
 
+# ---------------------------------------------------- calibration streams
+def stream_spec(n_lead: int, mesh) -> P:
+    """Spec for a calibration/activation-stream tensor (x_q / y_fp / gathered
+    minibatches / per-sample loss weights): the leading sample axis is
+    sharded over the data axes. Degrades to replication when the sample count
+    does not divide the data-parallel size (jit input shardings reject uneven
+    dims), mirroring every other rule in this module."""
+    dp = dp_axes(mesh)
+    return P(dp) if _div(n_lead, mesh, dp) else P()
+
+
+def stream_sharding(mesh, n_lead: int) -> NamedSharding:
+    """NamedSharding for a leading-sample-axis calibration tensor."""
+    return NamedSharding(mesh, stream_spec(n_lead, mesh))
+
+
+def replicated(mesh) -> NamedSharding:
+    """Fully replicated placement (rounding/Adam/LSQ carry states, minibatch
+    schedules, salts — everything the data-parallel recon loop must see
+    identically on every device)."""
+    return NamedSharding(mesh, P())
+
+
 def opt_spec_tree(opt_shapes: Any, param_specs: Any) -> Any:
     """Adam moments mirror parameter sharding; count replicated."""
     mu = jax.tree.map(lambda ps: {"m": ps, "v": ps}, param_specs,

@@ -83,6 +83,72 @@ def test_w8a8_parity():
     assert float(jnp.linalg.norm(got - want_lsq)) / denom < 0.02
 
 
+def test_w4a8_parity():
+    """Regression: ``qtensor_matmul`` silently dropped ``a_state`` unless
+    bits == 8, so direct kernel callers served W4A8 as W4A16 (the deploy
+    ctx papered over it with the training-time ``lsq.apply`` grid instead
+    of the snapped deploy grid). Packed-W4 matmul with a_state must equal
+    the snapped-grid fake-quant matmul exactly, stay within one activation
+    step of the recon-mode (LSQ fake-quant) numerics, and differ from the
+    activation-fp result."""
+    qt = _export((128, 64), 4)
+    assert qt.packed and qt.pack_axis == 0
+    x = jax.random.normal(jax.random.key(9), (11, 128), jnp.float32)
+    aq = QuantConfig(bits=8, symmetric=False, granularity="per_tensor",
+                     observer="minmax")
+    astate = lsq.init(jnp.asarray([float(x.min()), float(x.max())]), aq)
+    a_scale, a_zero = lsq.deploy_astate(astate, aq)
+    x_snap = a_scale * (jnp.clip(jnp.round(x / a_scale) + a_zero, 0, 255)
+                        - a_zero)
+    want = x_snap @ dequantize_qtensor(qt)
+    _assert_parity(x, qt, want, a_state=(a_scale, a_zero))
+    # recon-mode numerics: LSQ fake-quant differs only by the sub-step β snap
+    x_lsq = lsq.apply(x, astate, aq)
+    want_recon = x_lsq @ dequantize_qtensor(qt)
+    got = kops.qtensor_matmul(x, qt, a_state=(a_scale, a_zero), backend="xla")
+    denom = float(jnp.linalg.norm(want_recon)) + 1e-9
+    assert float(jnp.linalg.norm(got - want_recon)) / denom < 0.02
+    # and the old dropped-a_state behavior (W4A16) is measurably different
+    w4a16 = kops.qtensor_matmul(x, qt, backend="xla")
+    assert float(jnp.linalg.norm(got - w4a16)) > 0
+
+
+def test_w4a8_unpacked_odd_dim_parity():
+    """Odd d_in (no nibble pack) with a_state: the weight-only kernel must
+    see the same statically fake-quantized activations."""
+    qt = _export((33, 48), 4)
+    assert not qt.packed
+    x = jax.random.normal(jax.random.key(10), (5, 33), jnp.float32)
+    aq = QuantConfig(bits=8, symmetric=False, granularity="per_tensor",
+                     observer="minmax")
+    astate = lsq.init(jnp.asarray([float(x.min()), float(x.max())]), aq)
+    a_scale, a_zero = lsq.deploy_astate(astate, aq)
+    x_snap = a_scale * (jnp.clip(jnp.round(x / a_scale) + a_zero, 0, 255)
+                        - a_zero)
+    want = x_snap @ dequantize_qtensor(qt)
+    _assert_parity(x, qt, want, a_state=(a_scale, a_zero))
+
+
+def test_ctx_deploy_w4a8_routes_a_state_to_kernel():
+    """Deploy-mode ctx must hand packed-W4 sites their static activation
+    grid (the recipe says W4A8): output == kernel with a_state, != the
+    weight-only (W4A16) result."""
+    recipe = QuantRecipe(method="flexround", w_bits=4, a_bits=8)
+    qt = _export((64, 32), 4)
+    assert qt.packed
+    x = jax.random.normal(jax.random.key(11), (6, 64), jnp.float32)
+    aq = recipe.resolve("s").act
+    astate = lsq.init(jnp.asarray([float(x.min()), float(x.max())]), aq)
+    ctx = QuantCtx(mode="deploy", recipe=recipe, astates={"s": astate})
+    got = ctx.linear("s", x, qt)
+    want = kops.qtensor_matmul(x, qt,
+                               a_state=lsq.deploy_astate(astate, aq))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    w4a16 = kops.qtensor_matmul(x, qt)
+    assert float(jnp.linalg.norm(got - w4a16)) > 0
+
+
 @pytest.mark.parametrize("bits", [4, 8])
 def test_batched_expert_parity(bits):
     """batch_dims=1 stacked expert weights: per-expert kernel == per-expert

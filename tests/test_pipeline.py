@@ -1,0 +1,122 @@
+"""Data pipeline: deterministic per-host shards, straggler assembly, and the
+loud failure modes (divisibility / shard-shape mismatches must raise
+ValueError naming the offender — a bare assert vanishes under ``python -O``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import (CalibrationSet, StragglerPolicy, SyntheticTokens,
+                        assemble_global_batch)
+
+
+def _src(**kw):
+    return SyntheticTokens(vocab=64, seq_len=8, seed=0, **kw)
+
+
+def test_batch_is_pure_per_host_function():
+    src = _src()
+    a = src.batch(3, 8, host=1, n_hosts=4)
+    b = src.batch(3, 8, host=1, n_hosts=4)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    other = src.batch(3, 8, host=2, n_hosts=4)
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(other["tokens"]))
+    assert a["tokens"].shape == (2, 8)  # 8 global / 4 hosts
+
+
+def test_batch_divisibility_raises_valueerror():
+    with pytest.raises(ValueError, match="batch_size=10.*n_hosts=4"):
+        _src().batch(0, 10, host=0, n_hosts=4)
+
+
+def test_batch_host_out_of_range_raises():
+    with pytest.raises(ValueError, match="host index 4.*n_hosts=4"):
+        _src().batch(0, 8, host=4, n_hosts=4)
+    with pytest.raises(ValueError, match="host index -1"):
+        _src().batch(0, 8, host=-1, n_hosts=4)
+
+
+def _shards(n_hosts=4, local=2, seq=8):
+    src = _src()
+    return [
+        {k: np.asarray(v)
+         for k, v in src.batch(0, local * n_hosts, host=h,
+                               n_hosts=n_hosts).items()}
+        for h in range(n_hosts)
+    ]
+
+
+def test_assemble_all_present():
+    shards = _shards()
+    batch, weight = assemble_global_batch(shards, StragglerPolicy())
+    assert batch["tokens"].shape == (8, 8)
+    np.testing.assert_array_equal(np.asarray(weight), np.ones(8, np.float32))
+
+
+def test_assemble_dropped_shard_zero_filled_and_masked():
+    shards = _shards()
+    shards[2] = None
+    batch, weight = assemble_global_batch(
+        shards, StragglerPolicy(min_fraction=0.5))
+    assert batch["tokens"].shape == (8, 8)
+    np.testing.assert_array_equal(
+        np.asarray(weight), np.asarray([1, 1, 1, 1, 0, 0, 1, 1], np.float32))
+    np.testing.assert_array_equal(np.asarray(batch["tokens"][4:6]),
+                                  np.zeros((2, 8), np.int32))
+
+
+def test_assemble_below_min_fraction_times_out():
+    shards = _shards()
+    shards[0] = shards[1] = None
+    with pytest.raises(TimeoutError):
+        assemble_global_batch(shards, StragglerPolicy(min_fraction=0.75))
+    with pytest.raises(RuntimeError):
+        assemble_global_batch([None, None], StragglerPolicy())
+
+
+def test_assemble_shape_mismatch_names_host():
+    shards = _shards()
+    shards[3] = {k: v[:1] for k, v in shards[3].items()}  # truncated shard
+    with pytest.raises(ValueError, match=r"host 3 .*'labels'|'tokens'"):
+        assemble_global_batch(shards, StragglerPolicy())
+
+
+def test_assemble_key_mismatch_names_host():
+    shards = _shards()
+    del shards[1]["labels"]
+    with pytest.raises(ValueError, match="host 1 shard keys"):
+        assemble_global_batch(shards, StragglerPolicy())
+
+
+def test_assemble_proto_is_first_present_shard():
+    """With host 0 dropped, validation compares against the first *present*
+    host — the error must not blame the missing one."""
+    shards = _shards()
+    shards[0] = None
+    bad = {k: np.concatenate([v, v]) for k, v in shards[2].items()}
+    shards[2] = bad
+    with pytest.raises(ValueError, match="host 2 .* host 1"):
+        assemble_global_batch(shards, StragglerPolicy(min_fraction=0.5))
+
+
+def test_build_sharded_calibration_weight_semantics():
+    src = _src()
+    cal, weight = CalibrationSet.build_sharded(src, 16, n_hosts=4)
+    assert len(cal) == 16 and cal.tokens.shape == (16, 8)
+    assert float(jnp.sum(weight)) == 16.0
+
+    cal2, weight2 = CalibrationSet.build_sharded(
+        src, 16, n_hosts=4, drop_hosts=(1,),
+        policy=StragglerPolicy(min_fraction=0.5))
+    assert len(cal2) == 16
+    w = np.asarray(weight2)
+    assert w[4:8].sum() == 0 and w.sum() == 12
+    # present hosts' samples are identical with and without the drop (pure
+    # per-host batch function: no resharding of survivors)
+    np.testing.assert_array_equal(np.asarray(cal2.tokens[:4]),
+                                  np.asarray(cal.tokens[:4]))
+    np.testing.assert_array_equal(np.asarray(cal2.tokens[8:]),
+                                  np.asarray(cal.tokens[8:]))

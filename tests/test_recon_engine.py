@@ -228,8 +228,53 @@ def test_report_carries_trajectories():
     assert rep.steps_per_s > 0
     assert rep.loss_curve.shape == (recipe.iters,)
     assert rep.mse_curve.shape == (recipe.iters,)
-    # trajectories are JSON-safe by omission: extra attrs, not fields
-    assert "loss_curve" not in dataclasses.asdict(rep)
+    # trajectories are real fields now: serialization must not drop them
+    assert "loss_curve" in dataclasses.asdict(rep)
+
+
+def test_report_serialization_roundtrips_curves():
+    """to_json/from_json (the checkpoint meta path) must round-trip the
+    loss/mse trajectories through actual JSON, tolerate unknown keys from a
+    newer writer, and default missing curves to empty."""
+    import json
+
+    from repro.core.reconstruct import BlockReport
+
+    rep = rec.BlockReport("layers.3", 0.5, 0.1, iters=4, seconds=1.0,
+                          steps_per_s=4.0,
+                          loss_curve=jnp.asarray([4.0, 3.0, 2.0, 1.0]),
+                          mse_curve=jnp.asarray([0.4, 0.3, 0.2, 0.1]))
+    doc = json.loads(json.dumps(rep.to_json()))  # must be JSON-safe
+    back = BlockReport.from_json(doc)
+    assert back.name == rep.name and back.iters == rep.iters
+    np.testing.assert_allclose(back.loss_curve,
+                               np.asarray(rep.loss_curve), rtol=1e-6)
+    np.testing.assert_allclose(back.mse_curve,
+                               np.asarray(rep.mse_curve), rtol=1e-6)
+    # schema drift: unknown keys dropped, missing curves -> empty defaults
+    old = {"name": "b", "err_before": 1.0, "err_after": 0.5, "iters": 2,
+           "seconds": 0.1, "from_the_future": True}
+    legacy = BlockReport.from_json(old)
+    assert legacy.loss_curve.shape == (0,) and legacy.mse_curve.shape == (0,)
+
+
+def test_report_roundtrips_through_ptq_checkpoint(tmp_path):
+    """A resumed run must see the same trajectories the original wrote."""
+    recipe = QuantRecipe(method="flexround", w_bits=4, w_symmetric=True,
+                         a_bits=None, iters=10, batch_size=4)
+    x = jax.random.normal(jax.random.key(1), (16, 24), jnp.float32)
+    blocks = make_chain(1, token=None)
+    _, _, reports = quantize_blocks(blocks, recipe, x,
+                                    checkpoint_dir=str(tmp_path))
+    from repro.checkpoint.checkpoint import PTQCheckpointer
+    resumed = PTQCheckpointer(str(tmp_path)).load(blocks, recipe)
+    assert resumed is not None
+    loaded = resumed[3]
+    assert len(loaded) == len(reports) == 1
+    np.testing.assert_allclose(np.asarray(loaded[0].loss_curve),
+                               np.asarray(reports[0].loss_curve), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(loaded[0].mse_curve),
+                               np.asarray(reports[0].mse_curve), rtol=1e-6)
 
 
 def test_zero_iters():
