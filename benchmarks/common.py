@@ -8,7 +8,6 @@ analogue of the paper's ImageNet/GLUE/WikiText tables.
 """
 from __future__ import annotations
 
-import dataclasses
 import os
 import time
 from typing import Dict, Optional, Tuple

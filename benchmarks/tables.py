@@ -37,7 +37,6 @@ def table1_ablation(out: List[str]):
     base = dict(method="flexround", w_bits=4, w_symmetric=True, a_bits=None,
                 iters=200, lr=3e-3, batch_size=16)
 
-    variants = {"flexround": {}, }
     r = _ppl_after(model, params, QuantRecipe(**base))
     out.append(common.row("table1/flexround", r["us"],
                           f"ppl={r['ppl']:.3f};recon={r['recon_err']:.2e}"))
@@ -152,7 +151,6 @@ def bench_kernels(out: List[str]):
     """Kernel micro-bench: XLA path wall-time (CPU) + interpret-mode checks;
     derived = achieved GB/s or GFLOP/s on CPU (TPU numbers come from the
     roofline, not from this container)."""
-    import numpy as np
 
     from repro.kernels import ref as kref
 

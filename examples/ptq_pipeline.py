@@ -19,7 +19,6 @@ import sys
 import os
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-import jax
 
 from benchmarks import common
 from repro.core import QuantRecipe, method_api

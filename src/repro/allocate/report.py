@@ -23,7 +23,7 @@ from typing import Dict, Optional, Tuple
 from repro.core.quant_config import SiteRule, exact_site_pattern
 
 from repro.allocate.sensitivity import ProbeResult
-from repro.allocate.solve import Allocation, Budget
+from repro.allocate.solve import Allocation
 
 
 @dataclasses.dataclass

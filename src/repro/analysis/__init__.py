@@ -1,0 +1,18 @@
+"""quantlint — jaxpr- and AST-level quant-correctness static analysis.
+
+Two layers, one CLI (``python -m repro.analysis.lint``):
+
+- AST rules (QL1xx, :mod:`repro.analysis.ast_rules`): repo conventions —
+  no ad-hoc ``jax.jit``, no host casts/entropy in traced code, no
+  ``interpret=True`` defaults, Pallas divisibility guards.
+- jaxpr analyzers (QL2xx, :mod:`repro.analysis.jaxpr_checks` over
+  :mod:`repro.analysis.trace` entries): unused inputs, retrace budget,
+  donation safety, f64/weak-type promotion, sharding honesty — plus the
+  kernel-coverage report (:mod:`repro.analysis.coverage`).
+
+See ROADMAP "Static analysis" for the rule catalog and allowlist policy.
+"""
+from repro.analysis.jaxpr_checks import RetraceError, no_retrace
+from repro.analysis.report import AllowEntry, Finding, Report
+
+__all__ = ["AllowEntry", "Finding", "Report", "RetraceError", "no_retrace"]

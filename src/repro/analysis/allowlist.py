@@ -1,0 +1,67 @@
+"""Repo-wide default allowlist for quantlint.
+
+Every entry must carry a reason — the allowlist is the place where an
+intentional violation is *documented*, not merely silenced. Entries here are
+file-scoped globs (line numbers shift too easily under refactors); narrow,
+line-level suppressions belong inline as ``# quantlint: ignore[QLxxx]``.
+
+Rule catalog (see ROADMAP "Static analysis" for the prose version):
+
+AST layer (QL1xx, analysis/ast_rules.py):
+  QL101 jit-outside-engine        jax.jit outside the engine cache
+  QL102 host-cast-in-trace        int()/float()/bool() on tracer values
+  QL103 host-entropy-in-trace     time.* / np.random.* in traced code
+  QL104 interpret-default-true    interpret=True as a kernel default
+  QL105 pallas-missing-divis      pallas_call without a grid-divisibility
+                                  guard (pad helper or assert on %)
+
+jaxpr layer (QL2xx, analysis/jaxpr_checks.py):
+  QL201 unused-input              pytree leaf passed in but dead in the jaxpr
+  QL202 retrace-budget            compile count grows with layers / mesh
+  QL203 donation-unsafe           donated buffer aliases another argument
+  QL204 f64-promotion             float64 value inside a jitted quant path
+  QL205 weak-type-output          weakly-typed output (promotion hazard)
+  QL206 sharding-unconstrained    mesh= entry point without a dp-axis
+                                  sharding constraint on its streams
+  QL207 kernel-fallback           QTensor layout served by the dequantize
+                                  fallback instead of a kernel
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.report import AllowEntry
+
+DEFAULT_ALLOWLIST: List[AllowEntry] = [
+    # --- QL101: jax.jit outside the engine cache -------------------------
+    AllowEntry(
+        "QL101", "src/repro/core/reconstruct.py*",
+        "the engine cache itself — every jit here is behind _get_engine / "
+        "the schedule LRU, which is what QL101 protects"),
+    AllowEntry(
+        "QL101", "src/repro/kernels/*",
+        "module-level jit'd public kernel wrappers: one callable per kernel, "
+        "static block sizes — jit caching is keyed correctly by construction"),
+    AllowEntry(
+        "QL101", "src/repro/allocate/sensitivity.py*",
+        "probe jit is cached per (recipe, mapping) in _PROBE_CACHE keyed by "
+        "_probe_key; compile counts are asserted by tests/test_allocate.py"),
+    AllowEntry(
+        "QL101", "src/repro/launch/quantize.py*",
+        "serve_smoke jits prefill/decode once per process at the end of a "
+        "launch — no retrace surface"),
+    AllowEntry(
+        "QL101", "src/repro/launch/dryrun.py*",
+        "AOT .lower() cost estimation; compiles are the measurement"),
+    AllowEntry(
+        "QL101", "src/repro/launch/train.py*",
+        "pretraining step jit — one per run, outside the PTQ path"),
+    AllowEntry(
+        "QL101", "src/repro/analysis/*",
+        "the linter's own trace harness: jits entry points once to obtain "
+        "their jaxprs"),
+]
+
+
+def default_allowlist() -> List[AllowEntry]:
+    return list(DEFAULT_ALLOWLIST)

@@ -1,0 +1,273 @@
+"""AST-level quantlint rules (QL1xx) — repo-specific static lint over src/.
+
+These rules encode conventions the jaxpr layer cannot see (it only checks
+what actually got traced):
+
+  QL101 jit-outside-engine     ``jax.jit`` anywhere outside the engine cache.
+                               Ad-hoc jits are how per-layer retraces creep
+                               in — compiled callables must live behind
+                               ``core.reconstruct``'s engine/LRU caches (or
+                               be explicitly allowlisted with a reason).
+  QL102 host-cast-in-trace     ``int()/float()/bool()`` applied to a value
+                               built from jnp/jax inside a traced scope —
+                               a concretization error at best, a silent
+                               constant-fold at worst.
+  QL103 host-entropy-in-trace  ``time.*`` / ``np.random.*`` inside a traced
+                               scope: traces once, then the "random"/"now"
+                               value is baked into the compiled program.
+  QL104 interpret-default-true ``interpret=True`` as a parameter default in
+                               kernel code — interpret mode is a debugging
+                               override, never the shipped default.
+  QL105 pallas-missing-divis   a function invoking ``pl.pallas_call`` with
+                               no visible grid-divisibility guard (no pad
+                               helper and no ``assert ... % ...``) — Pallas
+                               silently miscomputes on ragged tiles.
+
+Traced scopes are detected structurally: functions decorated with
+``jax.jit``/``functools.partial(jax.jit, ...)``, functions passed (by name
+or inline lambda) to trace-inducing calls (``jit``, ``scan``, ``vmap``,
+``grad``, ``pallas_call``, ``fori_loop``, ...), and anything nested inside
+one. Methods called *from* traced code are not detected — the jaxpr layer
+covers those for the entry points that matter.
+
+Inline suppression: ``# quantlint: ignore[QL102]`` on the flagged line or
+the line above (rule id optional; bare ``quantlint: ignore`` silences all).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Optional, Set
+
+from repro.analysis.report import Report
+
+# Calls that trace the callable passed to them.
+TRACE_INDUCERS = {
+    "jit", "scan", "vmap", "pmap", "grad", "value_and_grad", "checkpoint",
+    "remat", "pallas_call", "fori_loop", "while_loop", "cond", "switch",
+    "shard_map", "custom_vjp", "custom_jvp", "associative_scan",
+}
+# Attribute roots that mark a value as tracer-producing for QL102.
+_JAX_ROOTS = {"jnp", "jax", "lax", "pl"}
+
+
+def _attr_chain(node: ast.AST) -> Optional[str]:
+    """'jax.lax.scan' for nested Attribute/Name nodes, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    """Matches ``jax.jit`` / bare ``jit`` and ``functools.partial(jax.jit,
+    ...)`` (as a call or a decorator)."""
+    chain = _attr_chain(node)
+    if chain in ("jax.jit", "jit"):
+        return True
+    if isinstance(node, ast.Call) and _attr_chain(node.func) in (
+            "functools.partial", "partial"):
+        return any(_is_jax_jit(a) for a in node.args)
+    return False
+
+
+def _touches_jax(node: ast.AST) -> bool:
+    """True if the subtree contains an attribute chain rooted at jnp/jax
+    (the QL102 'this is probably a tracer' heuristic — deliberately does
+    not fire on ``float(K)`` where K is a plain shape int)."""
+    for sub in ast.walk(node):
+        chain = _attr_chain(sub)
+        if chain and chain.split(".")[0] in _JAX_ROOTS:
+            return True
+    return False
+
+
+class _ScopeCollector(ast.NodeVisitor):
+    """First pass: find names of functions handed to trace inducers, and
+    functions whose decorators jit them."""
+
+    def __init__(self):
+        self.traced_names: Set[str] = set()
+        self.decorated: Set[ast.AST] = set()
+        self.inline_traced: Set[ast.AST] = set()  # lambdas / nested defs
+
+    def visit_Call(self, node: ast.Call):
+        chain = _attr_chain(node.func)
+        leaf = chain.split(".")[-1] if chain else ""
+        if leaf in TRACE_INDUCERS or _is_jax_jit(node.func):
+            for a in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(a, ast.Name):
+                    self.traced_names.add(a.id)
+                elif isinstance(a, ast.Lambda):
+                    self.inline_traced.add(a)
+        self.generic_visit(node)
+
+    def _check_decorators(self, node):
+        for d in node.decorator_list:
+            if _is_jax_jit(d):
+                self.decorated.add(node)
+            else:
+                chain = _attr_chain(d.func if isinstance(d, ast.Call) else d)
+                if chain and chain.split(".")[-1] in TRACE_INDUCERS:
+                    self.decorated.add(node)
+        self.generic_visit(node)
+
+    visit_FunctionDef = _check_decorators
+    visit_AsyncFunctionDef = _check_decorators
+
+
+def _traced_scopes(tree: ast.Module) -> List[ast.AST]:
+    """All function/lambda nodes whose bodies execute under a jax trace,
+    including functions nested inside one."""
+    coll = _ScopeCollector()
+    coll.visit(tree)
+    roots: List[ast.AST] = list(coll.decorated) + list(coll.inline_traced)
+    for node in ast.walk(tree):
+        if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and node.name in coll.traced_names and node not in roots):
+            roots.append(node)
+    # nested defs inherit tracedness from the enclosing scope
+    out: List[ast.AST] = []
+    seen: Set[int] = set()
+    for r in roots:
+        for node in ast.walk(r):
+            if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)) and id(node) not in seen):
+                seen.add(id(node))
+                out.append(node)
+    return out
+
+
+def _suppressed(lines: List[str], lineno: int, rule: str) -> bool:
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines):
+            text = lines[ln - 1]
+            if "quantlint: ignore" in text:
+                tag = text.split("quantlint: ignore", 1)[1]
+                if "[" not in tag or rule in tag:
+                    return True
+    return False
+
+
+def lint_source(src: str, path: str = "<string>") -> Report:
+    """Run every QL1xx rule over one module's source."""
+    rep = Report()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:  # pragma: no cover - repo sources always parse
+        rep.add("QL100", "syntax-error", "error", f"{path}:{e.lineno or 0}",
+                str(e))
+        return rep
+    lines = src.splitlines()
+
+    def add(rule, name, sev, lineno, msg):
+        if not _suppressed(lines, lineno, rule):
+            rep.add(rule, name, sev, f"{path}:{lineno}", msg)
+
+    # ---- QL101: any jax.jit call site or decorator ----------------------
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jax_jit(node.func):
+            add("QL101", "jit-outside-engine", "error", node.lineno,
+                "jax.jit call outside the engine cache; compiled callables "
+                "belong behind core.reconstruct's engine/LRU (or allowlist "
+                "with a reason)")
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for d in node.decorator_list:
+                if _is_jax_jit(d):
+                    add("QL101", "jit-outside-engine", "error", d.lineno,
+                        f"@jit decorator on {node.name!r} outside the "
+                        "engine cache")
+
+    # ---- QL104: interpret=True parameter default ------------------------
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        a = node.args
+        pos = a.posonlyargs + a.args
+        defaults = [None] * (len(pos) - len(a.defaults)) + list(a.defaults)
+        pairs = list(zip(pos, defaults)) + list(zip(a.kwonlyargs, a.kw_defaults))
+        for arg, default in pairs:
+            if (arg.arg == "interpret"
+                    and isinstance(default, ast.Constant)
+                    and default.value is True):
+                add("QL104", "interpret-default-true", "error", node.lineno,
+                    f"{node.name!r} defaults interpret=True; interpret mode "
+                    "is a debug override, resolve it via resolve_backend")
+
+    # ---- QL105: pallas_call without a divisibility guard ----------------
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        has_pallas = False
+        has_guard = False
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                chain = _attr_chain(sub.func) or ""
+                leaf = chain.split(".")[-1]
+                if leaf == "pallas_call":
+                    has_pallas = True
+                if "pad" in leaf.lower():
+                    has_guard = True  # pads to a block multiple
+            if isinstance(sub, ast.Assert):
+                for t in ast.walk(sub.test):
+                    if isinstance(t, ast.BinOp) and isinstance(t.op, ast.Mod):
+                        has_guard = True
+        if has_pallas and not has_guard:
+            add("QL105", "pallas-missing-divis", "warning", node.lineno,
+                f"{node.name!r} calls pl.pallas_call with no visible "
+                "grid-divisibility guard (no pad helper, no `assert ... %`)")
+
+    # ---- QL102 / QL103: inside traced scopes ----------------------------
+    for scope in _traced_scopes(tree):
+        body = scope.body if isinstance(scope.body, list) else [scope.body]
+        for stmt in body:
+            for sub in ast.walk(stmt):
+                # skip nested function bodies: they get their own scope entry
+                if sub is not stmt and isinstance(
+                        sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                if isinstance(sub, ast.Call):
+                    chain = _attr_chain(sub.func)
+                    if (chain in ("int", "float", "bool")
+                            and sub.args and _touches_jax(sub.args[0])):
+                        add("QL102", "host-cast-in-trace", "error",
+                            sub.lineno,
+                            f"{chain}() on a jnp/jax value inside a traced "
+                            "scope — concretizes the tracer (or bakes a "
+                            "constant into the compiled program)")
+                chain = _attr_chain(sub)
+                if chain and (chain.startswith("time.")
+                              or chain.startswith("np.random.")
+                              or chain.startswith("numpy.random.")):
+                    add("QL103", "host-entropy-in-trace", "error",
+                        sub.lineno,
+                        f"{chain} inside a traced scope — evaluated once at "
+                        "trace time, then frozen into the compiled program")
+    return rep
+
+
+def lint_file(path: str) -> Report:
+    with open(path) as fh:
+        src = fh.read()
+    return lint_source(src, path)
+
+
+def lint_tree(root: str, rel_to: Optional[str] = None) -> Report:
+    """Lint every .py file under ``root``; finding paths are reported
+    relative to ``rel_to`` (default: cwd) so allowlist globs like
+    ``src/repro/kernels/*`` match regardless of where lint runs."""
+    rep = Report()
+    rel_to = rel_to or os.getcwd()
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if not d.startswith((".", "__"))]
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            full = os.path.join(dirpath, fn)
+            shown = os.path.relpath(full, rel_to)
+            rep.extend(lint_source(open(full).read(), shown))
+    return rep

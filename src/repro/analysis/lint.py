@@ -1,0 +1,132 @@
+"""quantlint CLI — run the AST and jaxpr analyzers over this repo.
+
+    PYTHONPATH=src python -m repro.analysis.lint            # full default run
+    PYTHONPATH=src python -m repro.analysis.lint --ast-only # fast, no tracing
+    PYTHONPATH=src python -m repro.analysis.lint --decode-smoke   # + smoke LM
+    PYTHONPATH=src python -m repro.analysis.lint --seed-bug a_state_drop
+
+Default run = AST rules over ``src/`` + jaxpr checks on the toy entry points
+(recon chunk, probe step, every kernel-table qtensor_matmul layout), the
+retrace-flatness check, and the kernel-coverage report. The sharded recon
+entry joins automatically when the process exposes >= 8 devices (CPU: run
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
+``--decode-smoke`` additionally quantizes the smoke LM (export-only) and
+checks its deploy-mode decode jaxpr — this is what the analysis-smoke CI job
+runs. ``--seed-bug`` re-introduces a known shipped regression (the PR 5
+a_state drop, or a per-layer retrace) to prove the analyzers still catch it;
+the run must then exit non-zero.
+
+Exit code: 1 if any error-severity finding survives the allowlist, else 0.
+Warnings (e.g. QL207 conv fallbacks) never fail the run; they are the
+report's job to keep visible.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional, Tuple
+
+from repro.analysis import ast_rules, jaxpr_checks
+from repro.analysis.allowlist import default_allowlist
+from repro.analysis.report import Report, merge
+
+SEED_BUGS = ("a_state_drop", "per_layer_retrace")
+
+
+def repo_paths() -> Tuple[str, str]:
+    """(src dir, repo root) resolved from the installed package, so lint
+    output paths ("src/repro/...") match the allowlist globs regardless of
+    the working directory."""
+    import repro
+    pkg = os.path.dirname(os.path.abspath(repro.__file__))
+    src = os.path.dirname(pkg)
+    return src, os.path.dirname(src)
+
+
+def jaxpr_entries(*, seed_bug: Optional[str] = None,
+                  decode_smoke: bool = False, log=print) -> List:
+    """The default traced-entry set; mesh entry included when the process
+    has enough devices for the debug mesh."""
+    import jax
+
+    from repro.analysis import trace
+    entries = [trace.recon_chunk_entry(), trace.probe_entry(),
+               *trace.matmul_entries()]
+    if seed_bug == "a_state_drop":
+        entries.append(trace.qtensor_matmul_entry("w8a8", drop_a_state=True))
+    if jax.device_count() >= 8:
+        from repro.launch.mesh import make_debug_mesh
+        entries.append(trace.recon_chunk_entry(mesh=make_debug_mesh()))
+    else:
+        log("quantlint: < 8 devices — skipping the sharded recon entry "
+            "(run under XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    if decode_smoke:
+        entries.append(trace.deploy_decode_entry())
+    return entries
+
+
+def run_analysis(*, ast_only: bool = False, jaxpr_only: bool = False,
+                 seed_bug: Optional[str] = None, decode_smoke: bool = False,
+                 use_allowlist: bool = True, log=print) -> Report:
+    """Build the full quantlint report (shared by the CLI and
+    ``launch/quantize --analyze``)."""
+    reports = []
+    if not jaxpr_only:
+        src, root = repo_paths()
+        reports.append(ast_rules.lint_tree(src, rel_to=root))
+    if not ast_only:
+        for entry in jaxpr_entries(seed_bug=seed_bug,
+                                   decode_smoke=decode_smoke, log=log):
+            reports.append(jaxpr_checks.check_entry(entry))
+        reports.append(jaxpr_checks.check_retrace(
+            per_layer=(seed_bug == "per_layer_retrace")))
+        from repro.analysis.coverage import coverage_table, kernel_coverage
+        cov_rep, rows = kernel_coverage()
+        reports.append(cov_rep)
+        log("kernel coverage:")
+        log(coverage_table(rows))
+    rep = merge(*reports)
+    if use_allowlist:
+        rep = rep.apply_allowlist(default_allowlist())
+    return rep
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--ast-only", action="store_true",
+                    help="only the QL1xx AST rules (fast, no jax tracing)")
+    ap.add_argument("--jaxpr-only", action="store_true",
+                    help="only the QL2xx jaxpr checks + kernel coverage")
+    ap.add_argument("--decode-smoke", action="store_true",
+                    help="also quantize the smoke LM (export-only) and "
+                         "check its deploy-mode decode jaxpr")
+    ap.add_argument("--seed-bug", choices=SEED_BUGS, default=None,
+                    help="re-introduce a known regression; the run must "
+                         "exit non-zero")
+    ap.add_argument("--no-allowlist", action="store_true",
+                    help="report raw findings (skip the default allowlist)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="also print info/allowlisted findings")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the structured findings to PATH")
+    args = ap.parse_args(argv)
+    if args.ast_only and args.jaxpr_only:
+        ap.error("--ast-only and --jaxpr-only are mutually exclusive")
+
+    rep = run_analysis(ast_only=args.ast_only, jaxpr_only=args.jaxpr_only,
+                       seed_bug=args.seed_bug,
+                       decode_smoke=args.decode_smoke,
+                       use_allowlist=not args.no_allowlist)
+    print(rep.pretty(verbose=args.verbose))
+    if args.json:
+        rep.save_json(args.json)
+        print(f"findings written to {args.json}")
+    return rep.exit_code()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

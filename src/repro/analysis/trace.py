@@ -1,0 +1,325 @@
+"""Entry-point tracers: turn the repo's real compiled callables into
+:class:`TracedEntry` objects the jaxpr analyzers consume.
+
+Each builder constructs exemplar inputs at smoke scale, obtains the
+ClosedJaxpr via ``jax.jit(...).trace(...)``, and labels every flattened
+invar with a human-readable path (``astates.~s0.step`` …) so findings point
+at the actual pytree leaf, not "invar 17". The entries cover the
+ROADMAP-level contract surfaces:
+
+  recon_chunk      the engine's donated, scanned ``run_chunk`` (mesh on/off)
+  probe            the sensitivity probe step (repro.allocate)
+  qtensor_matmul   one entry per QTensor layout in the ROADMAP kernel table
+  deploy_decode    the smoke LM's deploy-mode decode step (opt-in: builds
+                   and quantizes a model)
+
+Seeded-bug variants (``drop_a_state=...``, ``per_layer=...``) deliberately
+re-introduce shipped regressions so tests can assert each analyzer flags
+exactly them; they are never part of the default lint run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import reconstruct as rec
+from repro.core import rtn
+from repro.core.quant_config import QuantConfig, QuantRecipe
+from repro.core.reconstruct import (BlockHandle, Site, init_astates,
+                                    init_wstates, site_plans)
+from repro.optim.adam import AdamConfig, adam_init
+
+
+@dataclasses.dataclass
+class TracedEntry:
+    """One traced entry point, ready for the jaxpr analyzers."""
+    name: str
+    closed: Any                      # ClosedJaxpr
+    labels: List[str]                # one per flat invar, in invar order
+    donated: frozenset               # flat invar indices donated to XLA
+    allow_unused: Tuple[str, ...] = ()   # fnmatch globs over labels
+    mesh: Any = None                 # jax Mesh when the entry declares one
+    dp: Tuple[str, ...] = ()         # data-parallel axis names to honor
+    donated_leaves: Tuple[Any, ...] = ()  # exemplar donated arrays (alias check)
+
+
+def _path_str(path) -> str:
+    toks = []
+    for p in path:
+        if hasattr(p, "key"):
+            toks.append(str(p.key))
+        elif hasattr(p, "idx"):
+            toks.append(f"[{p.idx}]")
+        else:
+            toks.append(str(p).strip("."))
+    return ".".join(toks)
+
+
+def trace_jitted(jitted, args: Tuple, *, name: str,
+                 argnames: Sequence[str],
+                 donate_argnums: Tuple[int, ...] = (),
+                 allow_unused: Tuple[str, ...] = (),
+                 mesh=None, dp: Tuple[str, ...] = ()) -> TracedEntry:
+    """Trace ``jitted(*args)`` and label its flattened invars.
+
+    ``argnames`` must name each positional argument; labels come out as
+    ``<argname>.<pytree path>``. ``donate_argnums`` mirrors the jit's own
+    donation so the donation analyzer knows which invars XLA may reuse.
+    """
+    closed = jitted.trace(*args).jaxpr
+    labels: List[str] = []
+    donated: set = set()
+    donated_leaves: List[Any] = []
+    for i, (aname, arg) in enumerate(zip(argnames, args)):
+        flat = jax.tree_util.tree_flatten_with_path(arg)[0]
+        for path, leaf in flat:
+            sub = _path_str(path)
+            labels.append(f"{aname}.{sub}" if sub else aname)
+            if i in donate_argnums:
+                donated.add(len(labels) - 1)
+                donated_leaves.append(leaf)
+    n_invars = len(closed.jaxpr.invars)
+    if len(labels) != n_invars:
+        raise RuntimeError(
+            f"{name}: invar labeling out of sync — {len(labels)} flattened "
+            f"arg leaves vs {n_invars} jaxpr invars; did the jit close over "
+            "an argument or take kwargs?")
+    return TracedEntry(name=name, closed=closed, labels=labels,
+                       donated=frozenset(donated),
+                       allow_unused=tuple(allow_unused), mesh=mesh, dp=dp,
+                       donated_leaves=tuple(donated_leaves))
+
+
+# --------------------------------------------------------------- toy blocks
+def toy_block(key, name: str, d: int = 16, h: int = 24,
+              token=None) -> BlockHandle:
+    """Two-linear gelu residual block (the recon-engine test exemplar)."""
+    k1, k2 = jax.random.split(key)
+    params = {
+        "w1": jax.random.normal(k1, (d, h), jnp.float32) * d**-0.5,
+        "w2": jax.random.normal(k2, (h, d), jnp.float32) * h**-0.5,
+    }
+
+    def apply(p, x, ctx, _n=name):
+        z = jax.nn.gelu(ctx.linear(f"{_n}.w1", x, p["w1"]))
+        return ctx.linear(f"{_n}.w2", z, p["w2"]) + x
+
+    sites = {f"{name}.w1": Site(("w1",)), f"{name}.w2": Site(("w2",))}
+    return BlockHandle(name, params, apply, sites, apply_key=token)
+
+
+def toy_chain(n: int, token: Optional[str] = "quantlint-chain",
+              d: int = 16, h: int = 24) -> List[BlockHandle]:
+    """``token=None`` disables engine sharing — the deliberate per-layer
+    retrace used as a seeded bug."""
+    keys = jax.random.split(jax.random.key(7), n)
+    return [toy_block(keys[i], f"blk{i}", d, h, token=token)
+            for i in range(n)]
+
+
+def toy_recipe(iters: int = 6, batch_size: int = 4, w_bits: int = 4,
+               a_bits: Optional[int] = 8) -> QuantRecipe:
+    return QuantRecipe(method="flexround", w_bits=w_bits, a_bits=a_bits,
+                       iters=iters, batch_size=batch_size)
+
+
+# ------------------------------------------------------------ recon chunk
+_RUN_CHUNK_ARGS = ("params", "wstates", "astates", "wopt", "aopt", "x_q",
+                   "y_fp", "idx", "k2s", "steps", "salts", "sweight")
+
+
+def recon_chunk_entry(mesh=None, *, n: int = 8, bs: int = 4, iters: int = 6,
+                      d: int = 16, h: int = 24) -> TracedEntry:
+    """The engine's ``run_chunk`` exactly as ``_run_scan`` drives it:
+    donated carry states, minibatch gather (``bs < n`` forces the gather so
+    the mesh variant exercises the stream re-constrain path)."""
+    assert bs < n, "bs < n keeps the gather (and sharding constraints) live"
+    block = toy_block(jax.random.key(3), "entry", d, h,
+                      token="quantlint-recon-entry")
+    recipe = toy_recipe(iters=iters, batch_size=bs)
+    plans = site_plans(block, recipe)
+    x_q = jax.random.normal(jax.random.key(11), (n, d), jnp.float32)
+    y_fp = jax.random.normal(jax.random.key(12), (n, d), jnp.float32)
+
+    canon = rec._canon_names(block)
+    wstates = init_wstates(block, recipe)
+    astates = init_astates(block, recipe, x_q)
+    c_w = {canon[r]: v for r, v in wstates.items()}
+    c_a = {canon[r]: astates[r] for r in block.sites if r in astates}
+    salts = {canon[r]: rec._salt(r) for r in block.sites}
+    wopt = adam_init(c_w, rec._W_BASE_CFG)
+    aopt = adam_init(c_a, AdamConfig(lr=recipe.lr_lsq))
+    c_w, c_a, wopt, aopt = rec._dealias(c_w, c_a, wopt, aopt)
+
+    idx, k2s = rec._batch_schedule(jax.random.key(0), iters, n, bs)
+    steps = jnp.arange(iters, dtype=jnp.int32)
+
+    eng = rec._build_engine(block, recipe,
+                            {canon[r]: plans[r] for r in block.sites},
+                            canon, mesh)
+    args = (block.params, c_w, c_a, wopt, aopt, x_q, y_fp, idx, k2s, steps,
+            salts, None)
+    dp = ()
+    if mesh is not None:
+        from repro.launch.mesh import dp_axes
+        dp = dp_axes(mesh)
+    return trace_jitted(
+        eng.run_chunk, args,
+        name="recon_chunk" + ("_sharded" if mesh is not None else ""),
+        argnames=_RUN_CHUNK_ARGS, donate_argnums=(1, 2, 3, 4),
+        # FlexRound has no step-annealed rounding regularizer (that is
+        # AdaRound's b-schedule), so the scanned step index is dead by
+        # design under this recipe
+        allow_unused=("steps",),
+        mesh=mesh, dp=dp)
+
+
+# ----------------------------------------------------------------- probe
+def probe_entry(bits: int = 4, d: int = 16, h: int = 24) -> TracedEntry:
+    """The sensitivity probe step (repro.allocate): traced one-hot gates
+    select the quantized site, so every leaf — including every gate — must
+    stay live in the jaxpr."""
+    from repro.allocate import sensitivity as sens
+    from repro.core import paths as pth
+
+    block = toy_block(jax.random.key(5), "probe", d, h,
+                      token="quantlint-probe-entry")
+    recipe = toy_recipe()
+    plans = site_plans(block, recipe)
+    canon = rec._canon_names(block)
+    cfgs_c = {canon[rn]: dataclasses.replace(plans[rn].weight, bits=bits)
+              for rn in block.sites}
+    probe_fn = sens._build_probe(block, cfgs_c, canon)
+
+    wstates = {}
+    for rn, site in block.sites.items():
+        w = pth.get_path(block.params, site.path)
+        wstates[canon[rn]] = rtn.init(w, cfgs_c[canon[rn]])
+    first = sorted(canon.values())[0]
+    gates = {c: jnp.asarray(c == first) for c in canon.values()}
+    x = jax.random.normal(jax.random.key(21), (4, d), jnp.float32)
+    y_fp = jax.random.normal(jax.random.key(22), (4, d), jnp.float32)
+    return trace_jitted(probe_fn, (block.params, x, y_fp, wstates, gates),
+                        name="probe_step",
+                        argnames=("params", "x", "y_fp", "wstates", "gates"))
+
+
+# --------------------------------------------------------- qtensor_matmul
+def _export_qt(shape, bits, granularity="per_channel", batch_dims=0):
+    qcfg = QuantConfig(bits=bits, symmetric=False, observer="minmax",
+                       granularity=granularity, batch_dims=batch_dims)
+    w = jax.random.normal(jax.random.key(9), shape, jnp.float32) * 0.1
+    return rtn.export(w, rtn.init(w, qcfg), qcfg, dtype=jnp.float32)
+
+
+def _a_state_for(x):
+    from repro.core import lsq
+    aq = QuantConfig(bits=8, symmetric=False, granularity="per_tensor",
+                     observer="minmax")
+    st = lsq.init(jnp.asarray([float(jnp.min(x)), float(jnp.max(x))]), aq)
+    return lsq.deploy_astate(st, aq)
+
+
+# (name, weight shape, bits, batch_dims, with_a_state) — one row per QTensor
+# layout in the ROADMAP kernel table. Dims are smoke-scale; the layout (pack
+# axis, batch dims, a_state presence) is what selects the kernel.
+MATMUL_LAYOUTS: Tuple[Tuple[str, Tuple[int, ...], int, int, bool], ...] = (
+    ("w4_packed", (64, 32), 4, 0, False),
+    ("w4a8_packed", (64, 32), 4, 0, True),
+    ("w8a8", (48, 24), 8, 0, True),
+    ("w8_weight_only", (48, 24), 8, 0, False),
+    ("w4_odd_unpacked", (33, 24), 4, 0, False),
+    ("experts_batched", (4, 32, 16), 4, 1, False),
+)
+
+
+def matmul_example(layout: str):
+    """(x, qt, a_state) exemplar inputs for one kernel-table layout."""
+    for name, shape, bits, batch_dims, with_a in MATMUL_LAYOUTS:
+        if name != layout:
+            continue
+        qt = _export_qt(shape, bits, batch_dims=batch_dims)
+        if batch_dims == 1:
+            E, K, _ = shape
+            x = jax.random.normal(jax.random.key(13), (E, 5, K), jnp.float32)
+        else:
+            x = jax.random.normal(jax.random.key(13), (5, shape[0]),
+                                  jnp.float32)
+        return x, qt, (_a_state_for(x) if with_a else None)
+    raise KeyError(layout)
+
+
+def qtensor_matmul_entry(layout: str, *,
+                         drop_a_state: bool = False) -> TracedEntry:
+    """One kernel-table layout traced through ``kernels.ops.qtensor_matmul``
+    on the XLA ref path.
+
+    ``drop_a_state=True`` re-introduces the PR 5 regression — the wrapper
+    accepts the activation grid but never hands it to the kernel — so the
+    unused-input analyzer has a known-bad fixture to flag.
+    """
+    from repro.kernels import ops as kops
+    x, qt, a_state = matmul_example(layout)
+
+    def run(x, qt, a_state):
+        passed = None if drop_a_state else a_state
+        return kops.qtensor_matmul(x, qt, a_state=passed, backend="xla")
+
+    args: Tuple[Any, ...] = (x, qt)
+    argnames: Tuple[str, ...] = ("x", "qt")
+    fn: Callable = lambda x, qt: run(x, qt, None)  # noqa: E731
+    if a_state is not None:
+        args = (x, qt, a_state)
+        argnames = ("x", "qt", "a_state")
+        fn = run
+    name = f"qtensor_matmul[{layout}]"
+    if drop_a_state:
+        name += "[seeded:a_state_drop]"
+    return trace_jitted(jax.jit(fn), args, name=name, argnames=argnames)
+
+
+def matmul_entries() -> List[TracedEntry]:
+    return [qtensor_matmul_entry(row[0]) for row in MATMUL_LAYOUTS]
+
+
+# ----------------------------------------------------------- deploy decode
+def deploy_decode_entry(arch: str = "smollm-135m",
+                        allow_unused: Tuple[str, ...] = (),
+                        ) -> TracedEntry:
+    """Quantize the smoke LM (iters=0: export-only) and trace its
+    deploy-mode decode step — every QTensor code/scale/zero leaf and every
+    LSQ deploy grid must stay live through the serving path."""
+    from repro.configs import get_smoke_config
+    from repro.core.context import QuantCtx
+    from repro.core.reconstruct import quantize_blocks
+    from repro.data import CalibrationSet, SyntheticTokens
+    from repro.models import build_model
+
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    recipe = QuantRecipe(method="flexround", w_bits=4, a_bits=8, iters=0,
+                         batch_size=4)
+    cal = CalibrationSet.build(SyntheticTokens(vocab=cfg.vocab, seq_len=16,
+                                               seed=0), 4)
+    x0, blocks, assemble = model.quant_blocks(params, cal.tokens)
+    finalized, astates, _ = quantize_blocks(blocks, recipe, x0)
+    qparams = assemble(finalized)
+
+    ctx = QuantCtx(mode="deploy", recipe=recipe, astates=astates,
+                   backend="xla")
+    batch, prompt = 2, 8
+    tokens = jax.random.randint(jax.random.key(1), (batch, prompt), 0,
+                                cfg.vocab)
+    cache = model.init_cache(batch, prompt + 4)
+    step = jax.jit(
+        lambda p, t, c, pos: model.decode_step(p, t, c, pos, ctx))
+    tok = tokens[:, -1:]
+    return trace_jitted(
+        step, (qparams, tok, cache, jnp.int32(prompt)),
+        name=f"deploy_decode[{cfg.name}]",
+        argnames=("params", "tokens", "cache", "pos"),
+        allow_unused=allow_unused)

@@ -33,6 +33,7 @@ site by folding a crc32 of the name into the step key.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 import zlib
 from typing import Any, Dict, Optional
 
@@ -46,6 +47,24 @@ from repro.core.quant_config import QuantRecipe, SitePlan
 
 def site_key(key: jax.Array, name: str) -> jax.Array:
     return jax.random.fold_in(key, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+
+
+# Conv sites that already warned about the dequantize fallback (host-level,
+# so a site warns once per process — not once per trace or per step).
+_CONV_FALLBACK_WARNED: set = set()
+
+
+def _warn_conv_fallback(name: str, qt: QTensor) -> None:
+    if name in _CONV_FALLBACK_WARNED:
+        return
+    _CONV_FALLBACK_WARNED.add(name)
+    from repro.core.qtensor import tree_weight_bytes
+    warnings.warn(
+        f"deploy conv site {name!r}: no conv kernel for QTensor shape "
+        f"{qt.shape} ({qt.bits}-bit, {tree_weight_bytes(qt)} bytes) — "
+        "dequantizing per call (correct but unaccelerated; see ROADMAP "
+        "Serving path / the quantlint QL207 kernel-coverage report)",
+        RuntimeWarning, stacklevel=3)
 
 
 @dataclasses.dataclass
@@ -181,9 +200,12 @@ class QuantCtx:
     def conv2d(self, name: str, x: jax.Array, w: Any, b: Optional[jax.Array] = None,
                stride=(1, 1), padding="SAME") -> jax.Array:
         """x: (N,H,W,Cin), w: (kh,kw,Cin,Cout). Deploy-mode conv QTensors
-        dequantize (no Pallas conv kernel yet — see ROADMAP Serving path)."""
+        dequantize (no Pallas conv kernel yet — see ROADMAP Serving path);
+        each such site warns once per process with its shape and bytes."""
         if self.mode == "capture":
             self.records.setdefault(name, []).append(x)
+        if self.mode == "deploy" and isinstance(w, QTensor):
+            _warn_conv_fallback(name, w)
         x_eff = self._act(name, x)
         w_eff = self._weight(name, w, 0)
         y = jax.lax.conv_general_dilated(

@@ -88,6 +88,11 @@ def main():
                     help="after quantization, run a short deploy-mode decode "
                          "through the kernel serving path and report "
                          "us/step + weight bytes moved")
+    ap.add_argument("--analyze", action="store_true",
+                    help="after quantization, run the quantlint analyzers "
+                         "(repro.analysis): AST rules over src/, jaxpr "
+                         "checks on the entry points, kernel-coverage "
+                         "report; exit non-zero on error findings")
     ap.add_argument("--auto-bits", type=float, default=None, metavar="VALUE",
                     help="automatic mixed precision: probe per-site "
                          "sensitivity and allocate bit-widths to meet this "
@@ -195,6 +200,13 @@ def main():
     if args.serve_smoke:
         serve_smoke(model, qparams, astates, recipe, cfg,
                     backend=args.backend)
+
+    if args.analyze:
+        from repro.analysis.lint import run_analysis
+        rep = run_analysis()
+        print(rep.pretty())
+        if rep.exit_code():
+            raise SystemExit("quantlint: error findings (see above)")
 
 
 def build_mesh(kind: str, *, multi_pod: bool = False):

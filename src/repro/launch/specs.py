@@ -7,14 +7,13 @@ core.reconstruct.finalize + assemble() produce at runtime.
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.shapes import ShapeSpec
 from repro.core.qtensor import QTensor
-from repro.models import build_model
 
 WHISPER_CROSS_LEN = 1504  # ~30s of frames, divisible by 16
 
@@ -48,7 +47,6 @@ def quantize_param_shapes(shapes: Any, cfg, bits: int = 8) -> Any:
 
     def rule(path, leaf):
         parts = _path_parts(path)
-        name = ".".join(str(p) for p in parts)
         short = str(parts[-1]) if parts else ""
         is_expert = "experts" in parts
         quantizable = (leaf.ndim >= 2

@@ -21,7 +21,6 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, get_shape, get_smoke_config
-from repro.core.context import QuantCtx
 from repro.data import SyntheticTokens
 from repro.launch import sharding as shd
 from repro.launch.steps import TRAIN_OPT, make_train_step

@@ -9,7 +9,6 @@ dry-run lowers; the Pallas kernels are the TPU-executable analogue.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -1,6 +1,7 @@
 """Shared model components: norms, RoPE, MLPs, embeddings, fused loss."""
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Optional
 
@@ -195,8 +196,6 @@ def fused_cross_entropy(x: jax.Array, w_out: jax.Array, labels: jax.Array,
 def embed_tokens(embed: jax.Array, tokens: jax.Array, mult: float = 1.0) -> jax.Array:
     return jnp.take(embed, tokens, axis=0) * mult
 
-
-import contextlib
 
 _AMBIENT_MESH = [None]
 

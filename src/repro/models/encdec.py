@@ -7,7 +7,6 @@ decoder has causal self-attention + cross-attention over encoder output.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -194,7 +193,6 @@ class EncDecLM:
         enc_out = self.encode(params, frames, ctx)
         x, kvs = self.decode_full(params, tokens, enc_out, ctx, collect=True)
         (sk, sv), (xk, xv) = kvs[0], kvs[1]
-        S = tokens.shape[1]
         cache["k"] = jax.lax.dynamic_update_slice(
             cache["k"], sk.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
         cache["v"] = jax.lax.dynamic_update_slice(
@@ -208,7 +206,6 @@ class EncDecLM:
         B = token.shape[0]
         x = common.embed_tokens(params["embed"], token)
         # sinusoidal position for the current token
-        sin_tab = _sinusoid(1, cfg.d_model)  # recomputed cheaply via angle*pos
         pos_emb = _sinusoid_at(pos, cfg.d_model)
         x = x + pos_emb.astype(x.dtype)[None, None, :]
 

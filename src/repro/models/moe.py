@@ -16,7 +16,6 @@ stack is never dequantized to HBM at serving time.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

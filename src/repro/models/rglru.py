@@ -9,12 +9,11 @@ cache of ``local_window`` slots so decode memory is O(window), not O(seq).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.context import QuantCtx
 from repro.core.reconstruct import BlockHandle, Site
 from repro.models import attention as attn
 from repro.models import common
@@ -294,7 +293,6 @@ class GriffinLM:
         return cache
 
     def prefill(self, params, tokens, cache, ctx):
-        cfg = self.cfg
         x, states = self.backbone(params, tokens, ctx, collect=True)
         S = tokens.shape[1]
         W = cache["layers"][self._first_attn()]["k"].shape[1] \

@@ -10,7 +10,6 @@ tiny), A/dt/D/norm params stay fp — see DESIGN.md §Arch-applicability.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

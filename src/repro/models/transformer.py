@@ -10,8 +10,7 @@ PTQ reconstruction, and int-weight serving.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -283,7 +282,6 @@ class TransformerLM:
         cfg = self.cfg
         x, _, kvs = self.backbone(params, tokens, ctx, extra_embeds,
                                   collect_kv=True)
-        S = x.shape[1]
         off = 0
         flat_kvs = [kv for kv in kvs if kv is not None]
         for (stack, kind, n), kv in zip(self._all_layers(params), flat_kvs):

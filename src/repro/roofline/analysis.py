@@ -15,7 +15,7 @@ Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 from __future__ import annotations
 
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs.shapes import ShapeSpec
 
@@ -58,7 +58,6 @@ def _shape_bytes(dtype: str, dims: str) -> int:
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Per-collective-kind byte totals (result-shape bytes, per device)."""
     out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
-    seen_done = set()
     for line in hlo_text.splitlines():
         if "-done" in line:
             continue  # avoid double counting async start/done pairs

@@ -11,7 +11,6 @@ import json
 import sys
 from typing import Dict, List
 
-from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
 
 GiB = 2**30
 

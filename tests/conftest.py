@@ -1,0 +1,18 @@
+"""Shared tier-1 fixtures.
+
+``no_retrace`` promotes the benchmark-only compile-count assertion into the
+test suite: it yields the ``repro.analysis.no_retrace`` guard, so a test can
+warm a compiled path and then demand compile flatness:
+
+    def test_something_stays_compiled(no_retrace):
+        warm()                      # first call compiles
+        with no_retrace(0):
+            warm()                  # any engine retrace fails the test
+"""
+import pytest
+
+
+@pytest.fixture
+def no_retrace():
+    from repro.analysis import no_retrace as guard
+    return guard

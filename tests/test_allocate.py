@@ -20,7 +20,6 @@ from repro.allocate import (AllocationReport, Budget, ProbeResult, SiteScore,
                             validate_budget)
 from repro.core import QuantRecipe
 from repro.core import reconstruct as rec
-from repro.core.context import QuantCtx
 from repro.core.reconstruct import BlockHandle, Site, quantize_blocks
 
 

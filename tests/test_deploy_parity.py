@@ -10,7 +10,7 @@ import pytest
 
 from repro.core import flexround, lsq, rtn
 from repro.core.context import QuantCtx
-from repro.core.qtensor import QTensor, dequantize_qtensor, from_codes
+from repro.core.qtensor import QTensor, dequantize_qtensor
 from repro.core.quant_config import QuantConfig, QuantRecipe
 from repro.kernels import ops as kops
 from repro.kernels import ref
@@ -286,3 +286,36 @@ def test_qmatmul_int8_asymmetric_weights():
                                rtol=1e-4, atol=1e-3)
     np.testing.assert_allclose(np.asarray(got_krn), np.asarray(want),
                                rtol=1e-4, atol=1e-3)
+
+
+def test_kernel_dispatch_compile_flat(no_retrace):
+    """Once warmed, every kernel-table dispatch path reuses its compiled
+    kernels: repeat calls with identical layouts trigger zero new XLA
+    compilations (the tier-1 ``no_retrace`` fixture, counting backend
+    compiles since the deploy path never touches the engine counters)."""
+    cases = []
+    for shape, bits, with_a in (((64, 32), 4, False), ((64, 32), 4, True),
+                                ((48, 24), 8, True), ((48, 24), 8, False),
+                                ((33, 24), 4, False)):
+        qt = _export(shape, bits)
+        x = jax.random.normal(jax.random.key(12), (5, shape[0]), jnp.float32)
+        a_state = None
+        if with_a:
+            aq = QuantConfig(bits=8, symmetric=False,
+                             granularity="per_tensor", observer="minmax")
+            astate = lsq.init(jnp.asarray([float(x.min()), float(x.max())]),
+                              aq)
+            a_state = lsq.deploy_astate(astate, aq)
+        cases.append((x, qt, a_state))
+    qt_e = _export((4, 32, 16), 4, batch_dims=1)
+    cases.append((jax.random.normal(jax.random.key(13), (4, 5, 32),
+                                    jnp.float32), qt_e, None))
+
+    def run_all():
+        for x, qt, a_state in cases:
+            jax.block_until_ready(
+                kops.qtensor_matmul(x, qt, a_state=a_state, backend="xla"))
+
+    run_all()  # warm: compiles each layout's kernel + eager glue once
+    with no_retrace(0, xla_budget=0):
+        run_all()

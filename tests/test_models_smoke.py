@@ -118,9 +118,6 @@ def test_multi_step_decode_consistency(arch):
     cur = tokens[:, -1:]
     last_logits = None
     for t in range(n_extra):
-        # feed argmax from full-forward teacher to compare per-step logits
-        full = jnp.concatenate(
-            [tokens] + [jnp.zeros((B, 0), tokens.dtype)], axis=1)
         last_logits, cache = model.decode_step(
             params, cur, cache, jnp.int32(S + t), ctx)
         nxt = jnp.argmax(last_logits[:, -1], axis=-1)[:, None]

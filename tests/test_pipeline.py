@@ -2,7 +2,6 @@
 loud failure modes (divisibility / shard-shape mismatches must raise
 ValueError naming the offender — a bare assert vanishes under ``python -O``).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -322,3 +322,27 @@ def test_engine_scope_evicts_probe_built_engines():
         rec.probe_teacher(inner, recipe)(inner.params, x)
         assert len(rec._ENGINE_CACHE) == 2
     assert len(rec._ENGINE_CACHE) == 1
+
+
+def test_reconstruct_compile_flat_under_no_retrace(no_retrace):
+    """The tier-1 ``no_retrace`` fixture guards the engine cache directly: a
+    second structurally identical block (shared apply_key) reconstructs with
+    zero new engine compiles, and the guard raises on a cache-defeating
+    block."""
+    from repro.analysis import RetraceError
+
+    token = "no-retrace-fixture"
+    recipe = QuantRecipe(method="flexround", w_bits=4, w_symmetric=True,
+                         a_bits=8, iters=3, batch_size=4)
+    x = jax.random.normal(jax.random.key(60), (4, 24), jnp.float32)
+    y = jax.random.normal(jax.random.key(61), (4, 24), jnp.float32)
+    reconstruct_block(make_block(jax.random.key(62), "nr0", token=token),
+                      recipe, x, y, jax.random.key(0))  # warm
+    with no_retrace(0):
+        reconstruct_block(make_block(jax.random.key(63), "nr1", token=token),
+                          recipe, x, y, jax.random.key(0))
+    with pytest.raises(RetraceError):
+        with no_retrace(0):
+            reconstruct_block(
+                make_block(jax.random.key(64), "nr2", token=None),
+                recipe, x, y, jax.random.key(0))

@@ -8,7 +8,6 @@ These are the executable versions of the paper's core claims:
 """
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core import QuantRecipe
 from repro.core.context import QuantCtx

@@ -9,7 +9,6 @@ import pytest
 
 from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
 from repro.core import QuantRecipe
-from repro.core.context import QuantCtx
 from repro.core.reconstruct import quantize_blocks
 from repro.data import CalibrationSet, StragglerPolicy, SyntheticTokens, \
     assemble_global_batch
@@ -113,7 +112,6 @@ def test_ptq_block_checkpoint_resume(tmp_path):
 
     ckdir = str(tmp_path / "ptq")
     # run only block 1 then "crash" (simulated by a wrapper that raises)
-    calls = {"n": 0}
     orig_apply = b2.apply
 
     def crashing_apply(p, x, ctx):
