@@ -1,6 +1,6 @@
-"""quantlint — jaxpr- and AST-level quant-correctness static analysis.
+"""quantlint — jaxpr-, AST- and abstract-interpretation-level quant analysis.
 
-Two layers, one CLI (``python -m repro.analysis.lint``):
+Three layers, one CLI (``python -m repro.analysis.lint``):
 
 - AST rules (QL1xx, :mod:`repro.analysis.ast_rules`): repo conventions —
   no ad-hoc ``jax.jit``, no host casts/entropy in traced code, no
@@ -9,6 +9,13 @@ Two layers, one CLI (``python -m repro.analysis.lint``):
   :mod:`repro.analysis.trace` entries): unused inputs, retrace budget,
   donation safety, f64/weak-type promotion, sharding honesty — plus the
   kernel-coverage report (:mod:`repro.analysis.coverage`).
+- quantcheck (QL3xx): an interval abstract interpreter over jaxprs
+  (:mod:`repro.analysis.intervals` — int-accumulator overflow proofs,
+  provable grid saturation, subnormal scale-product underflow), a
+  cross-backend differential kernel verifier sweeping every kernel-table
+  layout over a shape lattice (:mod:`repro.analysis.diffcheck`), and
+  shard-safety checks for lost/wrong-axis collectives
+  (:mod:`repro.analysis.shardcheck`).
 
 See ROADMAP "Static analysis" for the rule catalog and allowlist policy.
 """

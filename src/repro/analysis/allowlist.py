@@ -25,6 +25,38 @@ jaxpr layer (QL2xx, analysis/jaxpr_checks.py):
                                   sharding constraint on its streams
   QL207 kernel-fallback           QTensor layout served by the dequantize
                                   fallback instead of a kernel
+
+meta (analysis/report.py):
+  QL110 stale-allowlist           an allowlist entry suppressed nothing on a
+                                  full run — the excused violation is gone;
+                                  drop the entry (full runs only: partial
+                                  layers would see false staleness)
+
+quantcheck layer (QL3xx, analysis/intervals.py + diffcheck.py +
+shardcheck.py — abstract-interpretation numerics verifier and cross-backend
+kernel differ):
+  QL301 int-overflow              an integer equation's value interval
+                                  (contractions envelope-scaled to k_max)
+                                  leaves its dtype range; a fitting int
+                                  accumulator is reported as a proof (info)
+  QL302 grid-saturation           a clamp bound is provably always active —
+                                  the quantization grid collapses to a
+                                  constant for the declared value ranges
+  QL303 scale-underflow           a divisor interval entirely subnormal
+                                  (< float32 tiny): the s1*s2*s3 product
+                                  flushes to zero and kills FlexRound's
+                                  reciprocal-rule gradients
+  QL304 kernel-parity             Pallas-interpret vs XLA ref diverge on the
+                                  shape lattice (bit-exact for single-tile /
+                                  integer paths, tolerance elsewhere), or a
+                                  layout dispatched to the wrong kernel
+  QL305 lost-psum                 a shard_map collective reduces over the
+                                  wrong mesh axis, or an output is declared
+                                  replicated over a dp axis nothing reduced
+                                  (with check_rep=False hiding it)
+  QL306 scan-collective-          a collective inside a donated-carry scan
+        unconstrained             body with no sharding constraint anchoring
+                                  the reduced value's layout
 """
 from __future__ import annotations
 

@@ -9,9 +9,16 @@ what actually got traced):
                                ``core.reconstruct``'s engine/LRU caches (or
                                be explicitly allowlisted with a reason).
   QL102 host-cast-in-trace     ``int()/float()/bool()`` applied to a value
-                               built from jnp/jax inside a traced scope —
-                               a concretization error at best, a silent
-                               constant-fold at worst.
+                               *data-dependent on a tracer argument* inside
+                               a traced scope — a concretization error at
+                               best, a silent constant-fold at worst.
+                               Values that merely pass through jnp on
+                               concrete Python config constants
+                               (``jnp.float32(cfg.eps)``) do not flag:
+                               taint starts at the scope's arguments,
+                               propagates through assignments/arithmetic/
+                               method calls, and exits through static
+                               metadata (``.shape``/``.dtype``/...).
   QL103 host-entropy-in-trace  ``time.*`` / ``np.random.*`` inside a traced
                                scope: traces once, then the "random"/"now"
                                value is baked into the compiled program.
@@ -76,14 +83,93 @@ def _is_jax_jit(node: ast.AST) -> bool:
 
 
 def _touches_jax(node: ast.AST) -> bool:
-    """True if the subtree contains an attribute chain rooted at jnp/jax
-    (the QL102 'this is probably a tracer' heuristic — deliberately does
-    not fire on ``float(K)`` where K is a plain shape int)."""
+    """True if the subtree contains an attribute chain rooted at jnp/jax."""
     for sub in ast.walk(node):
         chain = _attr_chain(sub)
         if chain and chain.split(".")[0] in _JAX_ROOTS:
             return True
     return False
+
+
+# Attribute reads that leave tracer-land: static metadata, always concrete
+# Python values even on a tracer.
+_TAINT_EXIT_ATTRS = {"shape", "dtype", "ndim", "size", "weak_type",
+                     "sharding", "itemsize", "nbytes"}
+
+
+def _expr_tainted(node: ast.AST, tainted: Set[str]) -> bool:
+    """Is this expression's value data-dependent on a tracer argument?
+
+    Taint flows from names in ``tainted`` through arithmetic, subscripts,
+    method calls and jnp/jax calls; it *exits* through static-metadata
+    attributes (``x.shape[0]`` is a concrete int). A jnp call with no
+    tainted argument (``jnp.float32(1e-6)`` on a config constant) is not
+    tainted — that is the false-positive class this analysis removes.
+    """
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Attribute):
+        if node.attr in _TAINT_EXIT_ATTRS:
+            return False
+        chain = _attr_chain(node)
+        if chain and chain.split(".")[0] in _JAX_ROOTS:
+            return False   # the module/function object itself, not data
+        return _expr_tainted(node.value, tainted)
+    if isinstance(node, ast.Call):
+        if any(_expr_tainted(a, tainted) for a in node.args):
+            return True
+        if any(kw.value is not None and _expr_tainted(kw.value, tainted)
+               for kw in node.keywords):
+            return True
+        # method call on a tainted object: x.sum(), x.astype(...)
+        if isinstance(node.func, ast.Attribute):
+            return _expr_tainted(node.func, tainted)
+        return False
+    if isinstance(node, ast.Subscript):
+        return _expr_tainted(node.value, tainted)
+    if isinstance(node, ast.Constant):
+        return False
+    return any(_expr_tainted(c, tainted)
+               for c in ast.iter_child_nodes(node))
+
+
+def _scope_tainted(scope: ast.AST) -> Set[str]:
+    """Names data-dependent on the scope's arguments: the arguments
+    themselves plus assignment targets whose RHS is tainted (iterated to a
+    bounded fixpoint so chains of assignments propagate)."""
+    a = scope.args
+    tainted: Set[str] = {x.arg for x in a.posonlyargs + a.args + a.kwonlyargs}
+    if a.vararg:
+        tainted.add(a.vararg.arg)
+    if a.kwarg:
+        tainted.add(a.kwarg.arg)
+    body = scope.body if isinstance(scope.body, list) else [scope.body]
+    for _ in range(4):
+        changed = False
+
+        def mark(target):
+            nonlocal changed
+            for nm in ast.walk(target):
+                if isinstance(nm, ast.Name) and nm.id not in tainted:
+                    tainted.add(nm.id)
+                    changed = True
+
+        for stmt in body:
+            for sub in ast.walk(stmt):
+                if (isinstance(sub, ast.Assign)
+                        and _expr_tainted(sub.value, tainted)):
+                    for t in sub.targets:
+                        mark(t)
+                elif (isinstance(sub, (ast.AnnAssign, ast.AugAssign))
+                      and sub.value is not None
+                      and _expr_tainted(sub.value, tainted)):
+                    mark(sub.target)
+                elif (isinstance(sub, ast.For)
+                      and _expr_tainted(sub.iter, tainted)):
+                    mark(sub.target)
+        if not changed:
+            break
+    return tainted
 
 
 class _ScopeCollector(ast.NodeVisitor):
@@ -222,7 +308,9 @@ def lint_source(src: str, path: str = "<string>") -> Report:
                 "grid-divisibility guard (no pad helper, no `assert ... %`)")
 
     # ---- QL102 / QL103: inside traced scopes ----------------------------
+    flagged: Set[tuple] = set()   # (rule, lineno): nested scopes overlap
     for scope in _traced_scopes(tree):
+        tainted = _scope_tainted(scope)
         body = scope.body if isinstance(scope.body, list) else [scope.body]
         for stmt in body:
             for sub in ast.walk(stmt):
@@ -232,17 +320,22 @@ def lint_source(src: str, path: str = "<string>") -> Report:
                     continue
                 if isinstance(sub, ast.Call):
                     chain = _attr_chain(sub.func)
-                    if (chain in ("int", "float", "bool")
-                            and sub.args and _touches_jax(sub.args[0])):
+                    if (chain in ("int", "float", "bool") and sub.args
+                            and _expr_tainted(sub.args[0], tainted)
+                            and ("QL102", sub.lineno) not in flagged):
+                        flagged.add(("QL102", sub.lineno))
                         add("QL102", "host-cast-in-trace", "error",
                             sub.lineno,
-                            f"{chain}() on a jnp/jax value inside a traced "
-                            "scope — concretizes the tracer (or bakes a "
-                            "constant into the compiled program)")
+                            f"{chain}() on a value data-dependent on a "
+                            "tracer argument inside a traced scope — "
+                            "concretizes the tracer (or bakes a constant "
+                            "into the compiled program)")
                 chain = _attr_chain(sub)
                 if chain and (chain.startswith("time.")
                               or chain.startswith("np.random.")
-                              or chain.startswith("numpy.random.")):
+                              or chain.startswith("numpy.random.")) \
+                        and ("QL103", sub.lineno) not in flagged:
+                    flagged.add(("QL103", sub.lineno))
                     add("QL103", "host-entropy-in-trace", "error",
                         sub.lineno,
                         f"{chain} inside a traced scope — evaluated once at "

@@ -1,21 +1,36 @@
-"""quantlint CLI — run the AST and jaxpr analyzers over this repo.
+"""quantlint CLI — run the AST, jaxpr and quantcheck analyzers over this repo.
 
     PYTHONPATH=src python -m repro.analysis.lint            # full default run
     PYTHONPATH=src python -m repro.analysis.lint --ast-only # fast, no tracing
     PYTHONPATH=src python -m repro.analysis.lint --decode-smoke   # + smoke LM
     PYTHONPATH=src python -m repro.analysis.lint --seed-bug a_state_drop
+    PYTHONPATH=src python -m repro.analysis.lint --diff-full \
+        --parity-json parity.json --coverage-json coverage.json
 
-Default run = AST rules over ``src/`` + jaxpr checks on the toy entry points
-(recon chunk, probe step, every kernel-table qtensor_matmul layout), the
-retrace-flatness check, and the kernel-coverage report. The sharded recon
-entry joins automatically when the process exposes >= 8 devices (CPU: run
-under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+Default run = AST rules over ``src/`` + jaxpr checks (QL2xx) and quantcheck
+(QL3xx: interval abstract interpretation + shard safety) on the toy entry
+points (recon chunk, probe step, FlexRound apply, every kernel-table
+qtensor_matmul layout), the retrace-flatness check, the kernel-coverage
+report, and a smoke subset (3 shapes/layout) of the QL304 cross-backend
+differential sweep. The sharded recon entry joins automatically when the
+process exposes >= 8 devices (CPU: run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 
-``--decode-smoke`` additionally quantizes the smoke LM (export-only) and
-checks its deploy-mode decode jaxpr — this is what the analysis-smoke CI job
-runs. ``--seed-bug`` re-introduces a known shipped regression (the PR 5
-a_state drop, or a per-layer retrace) to prove the analyzers still catch it;
-the run must then exit non-zero.
+``--diff-full`` runs the full QL304 shape lattice (>= 20 shapes per layout;
+what the analysis-verify CI job runs); ``--parity-json`` /
+``--coverage-json`` write the parity matrix and QL207 coverage rows as CI
+artifacts. ``--decode-smoke`` additionally quantizes the smoke LM
+(export-only) and checks its deploy-mode decode jaxpr.
+
+``--seed-bug`` re-introduces a known regression to prove the analyzers
+still catch it; the run must then exit non-zero: ``a_state_drop`` /
+``per_layer_retrace`` (jaxpr layer), ``int8_overflow`` / ``scale_underflow``
+/ ``lost_psum`` (quantcheck layer). Seeded runs skip the differential sweep
+(they are targeted regression checks, not parity runs).
+
+Full runs (no ``--ast-only``/``--jaxpr-only``/``--seed-bug``) also audit the
+allowlist itself: an entry that suppressed nothing errors as QL110 — stale
+excuses get dropped, not accumulated.
 
 Exit code: 1 if any error-severity finding survives the allowlist, else 0.
 Warnings (e.g. QL207 conv fallbacks) never fail the run; they are the
@@ -24,6 +39,8 @@ report's job to keep visible.
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import os
 import sys
 from typing import List, Optional, Tuple
@@ -32,7 +49,8 @@ from repro.analysis import ast_rules, jaxpr_checks
 from repro.analysis.allowlist import default_allowlist
 from repro.analysis.report import Report, merge
 
-SEED_BUGS = ("a_state_drop", "per_layer_retrace")
+SEED_BUGS = ("a_state_drop", "per_layer_retrace", "int8_overflow",
+             "scale_underflow", "lost_psum")
 
 
 def repo_paths() -> Tuple[str, str]:
@@ -53,9 +71,15 @@ def jaxpr_entries(*, seed_bug: Optional[str] = None,
 
     from repro.analysis import trace
     entries = [trace.recon_chunk_entry(), trace.probe_entry(),
-               *trace.matmul_entries()]
+               trace.flexround_apply_entry(), *trace.matmul_entries()]
     if seed_bug == "a_state_drop":
         entries.append(trace.qtensor_matmul_entry("w8a8", drop_a_state=True))
+    elif seed_bug == "int8_overflow":
+        entries.append(trace.int8_overflow_entry())
+    elif seed_bug == "scale_underflow":
+        entries.append(trace.flexround_apply_entry(underflow=True))
+    elif seed_bug == "lost_psum":
+        entries.append(trace.lost_psum_entry())
     if jax.device_count() >= 8:
         from repro.launch.mesh import make_debug_mesh
         entries.append(trace.recon_chunk_entry(mesh=make_debug_mesh()))
@@ -69,9 +93,14 @@ def jaxpr_entries(*, seed_bug: Optional[str] = None,
 
 def run_analysis(*, ast_only: bool = False, jaxpr_only: bool = False,
                  seed_bug: Optional[str] = None, decode_smoke: bool = False,
-                 use_allowlist: bool = True, log=print) -> Report:
+                 use_allowlist: bool = True, diff_full: bool = False,
+                 parity_json: Optional[str] = None,
+                 coverage_json: Optional[str] = None, log=print) -> Report:
     """Build the full quantlint report (shared by the CLI and
     ``launch/quantize --analyze``)."""
+    from repro.analysis.intervals import check_intervals
+    from repro.analysis.shardcheck import check_shard_safety
+
     reports = []
     if not jaxpr_only:
         src, root = repo_paths()
@@ -80,16 +109,40 @@ def run_analysis(*, ast_only: bool = False, jaxpr_only: bool = False,
         for entry in jaxpr_entries(seed_bug=seed_bug,
                                    decode_smoke=decode_smoke, log=log):
             reports.append(jaxpr_checks.check_entry(entry))
+            # quantcheck: interval numerics + shard safety per entry
+            reports.append(check_intervals(entry))
+            reports.append(check_shard_safety(entry))
         reports.append(jaxpr_checks.check_retrace(
             per_layer=(seed_bug == "per_layer_retrace")))
         from repro.analysis.coverage import coverage_table, kernel_coverage
-        cov_rep, rows = kernel_coverage()
+        cov_rep, cov_rows = kernel_coverage()
         reports.append(cov_rep)
         log("kernel coverage:")
-        log(coverage_table(rows))
+        log(coverage_table(cov_rows))
+        if coverage_json:
+            with open(coverage_json, "w") as fh:
+                json.dump({"rows": [dataclasses.asdict(r) for r in cov_rows]},
+                          fh, indent=2)
+            log(f"coverage rows written to {coverage_json}")
+        if seed_bug is None:
+            from repro.analysis.diffcheck import (parity_json as pj,
+                                                  parity_table, run_diffcheck)
+            diff_rep, rows = run_diffcheck(smoke=not diff_full)
+            reports.append(diff_rep)
+            log(f"QL304 differential sweep ({'full' if diff_full else 'smoke'}"
+                f" lattice, {len(rows)} cells):")
+            log(parity_table(rows))
+            if parity_json:
+                with open(parity_json, "w") as fh:
+                    json.dump(pj(rows), fh, indent=2)
+                log(f"parity matrix written to {parity_json}")
     rep = merge(*reports)
     if use_allowlist:
-        rep = rep.apply_allowlist(default_allowlist())
+        # staleness is only decidable on a full run: a partial layer never
+        # produces the findings the entry exists for
+        full_run = not ast_only and not jaxpr_only and seed_bug is None
+        rep = rep.apply_allowlist(default_allowlist(),
+                                  report_stale=full_run)
     return rep
 
 
@@ -100,10 +153,13 @@ def main(argv=None) -> int:
     ap.add_argument("--ast-only", action="store_true",
                     help="only the QL1xx AST rules (fast, no jax tracing)")
     ap.add_argument("--jaxpr-only", action="store_true",
-                    help="only the QL2xx jaxpr checks + kernel coverage")
+                    help="only the QL2xx/QL3xx jaxpr checks + kernel coverage")
     ap.add_argument("--decode-smoke", action="store_true",
                     help="also quantize the smoke LM (export-only) and "
                          "check its deploy-mode decode jaxpr")
+    ap.add_argument("--diff-full", action="store_true",
+                    help="run the full QL304 shape lattice (>= 20 shapes per "
+                         "layout) instead of the 3-shape smoke subset")
     ap.add_argument("--seed-bug", choices=SEED_BUGS, default=None,
                     help="re-introduce a known regression; the run must "
                          "exit non-zero")
@@ -113,6 +169,10 @@ def main(argv=None) -> int:
                     help="also print info/allowlisted findings")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the structured findings to PATH")
+    ap.add_argument("--parity-json", default=None, metavar="PATH",
+                    help="write the QL304 parity matrix to PATH (CI artifact)")
+    ap.add_argument("--coverage-json", default=None, metavar="PATH",
+                    help="write the QL207 coverage rows to PATH (CI artifact)")
     args = ap.parse_args(argv)
     if args.ast_only and args.jaxpr_only:
         ap.error("--ast-only and --jaxpr-only are mutually exclusive")
@@ -120,7 +180,10 @@ def main(argv=None) -> int:
     rep = run_analysis(ast_only=args.ast_only, jaxpr_only=args.jaxpr_only,
                        seed_bug=args.seed_bug,
                        decode_smoke=args.decode_smoke,
-                       use_allowlist=not args.no_allowlist)
+                       use_allowlist=not args.no_allowlist,
+                       diff_full=args.diff_full,
+                       parity_json=args.parity_json,
+                       coverage_json=args.coverage_json)
     print(rep.pretty(verbose=args.verbose))
     if args.json:
         rep.save_json(args.json)

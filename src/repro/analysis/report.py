@@ -77,17 +77,38 @@ class Report:
         return self
 
     # ------------------------------------------------------------ filtering
-    def apply_allowlist(self, entries: Sequence[AllowEntry]) -> "Report":
+    def apply_allowlist(self, entries: Sequence[AllowEntry],
+                        report_stale: bool = False) -> "Report":
         """Return a new report with matched findings downgraded to ``info``
-        (reason attached); unmatched findings pass through unchanged."""
+        (reason attached); unmatched findings pass through unchanged.
+
+        ``report_stale=True`` additionally errors (QL110) on every allowlist
+        entry that suppressed nothing: a stale entry is a standing blanket
+        ignore waiting for an unrelated future finding to hide under it.
+        Only meaningful when this report covers *all* analysis layers —
+        partial runs (``--ast-only`` etc.) would see false staleness.
+        """
         out = []
+        used: set = set()
         for f in self.findings:
             hit = next((e for e in entries if e.matches(f)), None)
-            if hit is not None and not f.allowlisted:
-                f = dataclasses.replace(f, severity="info",
-                                        allowlisted=hit.reason)
+            if hit is not None:
+                used.add((hit.rule, hit.where))
+                if not f.allowlisted:
+                    f = dataclasses.replace(f, severity="info",
+                                            allowlisted=hit.reason)
             out.append(f)
-        return Report(out)
+        rep = Report(out)
+        if report_stale:
+            for e in entries:
+                if (e.rule, e.where) not in used:
+                    rep.add("QL110", "stale-allowlist", "error",
+                            f"allowlist:{e.rule}@{e.where}",
+                            f"allowlist entry for {e.rule} at {e.where!r} "
+                            "matched no finding — the violation it excused "
+                            "is gone; drop the entry (reason was: "
+                            f"{e.reason})")
+        return rep
 
     def errors(self) -> List[Finding]:
         return [f for f in self.findings if f.severity == "error"]

@@ -44,6 +44,12 @@ class TracedEntry:
     mesh: Any = None                 # jax Mesh when the entry declares one
     dp: Tuple[str, ...] = ()         # data-parallel axis names to honor
     donated_leaves: Tuple[Any, ...] = ()  # exemplar donated arrays (alias check)
+    # quantcheck (repro.analysis.intervals) inputs: value-range seeds for
+    # the interval interpreter — (label glob, lo, hi), first match wins —
+    # and the shape-envelope name whose k_max scales every contraction in
+    # the overflow proof (kernels.envelope.SHAPE_ENVELOPES key)
+    ranges: Tuple[Tuple[str, float, float], ...] = ()
+    envelope: Optional[str] = None
 
 
 def _path_str(path) -> str:
@@ -62,7 +68,9 @@ def trace_jitted(jitted, args: Tuple, *, name: str,
                  argnames: Sequence[str],
                  donate_argnums: Tuple[int, ...] = (),
                  allow_unused: Tuple[str, ...] = (),
-                 mesh=None, dp: Tuple[str, ...] = ()) -> TracedEntry:
+                 mesh=None, dp: Tuple[str, ...] = (),
+                 ranges: Tuple[Tuple[str, float, float], ...] = (),
+                 envelope: Optional[str] = None) -> TracedEntry:
     """Trace ``jitted(*args)`` and label its flattened invars.
 
     ``argnames`` must name each positional argument; labels come out as
@@ -90,7 +98,8 @@ def trace_jitted(jitted, args: Tuple, *, name: str,
     return TracedEntry(name=name, closed=closed, labels=labels,
                        donated=frozenset(donated),
                        allow_unused=tuple(allow_unused), mesh=mesh, dp=dp,
-                       donated_leaves=tuple(donated_leaves))
+                       donated_leaves=tuple(donated_leaves),
+                       ranges=tuple(ranges), envelope=envelope)
 
 
 # --------------------------------------------------------------- toy blocks
@@ -262,7 +271,19 @@ def qtensor_matmul_entry(layout: str, *,
     unused-input analyzer has a known-bad fixture to flag.
     """
     from repro.kernels import ops as kops
+    from repro.kernels.envelope import get_envelope
     x, qt, a_state = matmul_example(layout)
+    env = get_envelope(layout)
+    # value-range contract for the interval interpreter: activation
+    # magnitude and grid-scale bounds come from the layout's envelope;
+    # codes/zero live on the integer grid
+    ranges = (
+        ("x*", -env.x_abs_max, env.x_abs_max),
+        ("qt.scale*", env.scale_min, env.scale_max),
+        ("qt.zero*", 0.0, float(env.code_max)),
+        ("a_state.[0]", env.scale_min, env.scale_max),    # deploy a_scale
+        ("a_state.[1]", 0.0, 255.0),                      # deploy a_zero
+    )
 
     def run(x, qt, a_state):
         passed = None if drop_a_state else a_state
@@ -278,7 +299,8 @@ def qtensor_matmul_entry(layout: str, *,
     name = f"qtensor_matmul[{layout}]"
     if drop_a_state:
         name += "[seeded:a_state_drop]"
-    return trace_jitted(jax.jit(fn), args, name=name, argnames=argnames)
+    return trace_jitted(jax.jit(fn), args, name=name, argnames=argnames,
+                        ranges=ranges, envelope=layout)
 
 
 def matmul_entries() -> List[TracedEntry]:
@@ -323,3 +345,102 @@ def deploy_decode_entry(arch: str = "smollm-135m",
         name=f"deploy_decode[{cfg.name}]",
         argnames=("params", "tokens", "cache", "pos"),
         allow_unused=allow_unused)
+
+
+# ------------------------------------------------- quantcheck (QL3xx) entries
+def flexround_apply_entry(*, underflow: bool = False,
+                          d: int = 32, h: int = 16) -> TracedEntry:
+    """The PTQ inner loop's fake-quant Ŵ = s1*(clip(round(W/(s1⊙S2⊙s3))+z)-z)
+    traced for the interval interpreter.
+
+    The healthy range contract mirrors ``flexround.project``: every divisor
+    factor is floored at EPS = 1e-6, so the s1*s2*s3 product is provably
+    normal (>= 1e-18 >> float32 tiny) and QL303 stays quiet. ``underflow=True``
+    re-seeds the factors at ~1e-18 each — the projection bug quantcheck
+    exists to catch — making the whole divisor interval subnormal.
+    """
+    from repro.core import flexround
+    from repro.kernels.envelope import get_envelope
+
+    qcfg = QuantConfig(bits=4, symmetric=False, observer="minmax",
+                       granularity="per_channel")
+    w = jax.random.normal(jax.random.key(17), (d, h), jnp.float32) * 0.1
+    state = flexround.init(w, qcfg)
+    env = get_envelope("flexround_apply")
+    lo, hi = ((1e-20, 1e-18) if underflow
+              else (env.scale_min, env.scale_max))
+    ranges = (
+        ("w*", -env.x_abs_max, env.x_abs_max),
+        ("state.s1*", lo, hi),
+        ("state.s2*", lo, hi),
+        ("state.s3*", lo, hi),
+        ("state.zero*", 0.0, float(qcfg.qmax)),
+    )
+    fn = jax.jit(lambda w, state: flexround.apply(w, state, qcfg))
+    name = "flexround_apply"
+    if underflow:
+        name += "[seeded:scale_underflow]"
+    return trace_jitted(fn, (w, state), name=name, argnames=("w", "state"),
+                        ranges=ranges, envelope="flexround_apply")
+
+
+def int8_overflow_entry() -> TracedEntry:
+    """Seeded QL301 fixture: the W8A8 matmul accumulating in int16.
+
+    int8 x int8 products reach 2^14; even the smoke-scale K = 48 contraction
+    tops 2^19, and the envelope's k_max = 32768 pushes the proof bound to
+    ~2^29 — either way far past int16. The healthy kernels accumulate in
+    int32 (``preferred_element_type=jnp.int32``); this entry re-introduces
+    the narrow accumulator so tests can pin quantcheck catching it.
+    """
+    a_q = jax.random.randint(jax.random.key(23), (8, 48), -128, 128,
+                             dtype=jnp.int8)
+    b_q = jax.random.randint(jax.random.key(24), (48, 24), -128, 128,
+                             dtype=jnp.int8)
+
+    def bad(a_q, b_q):
+        acc = jax.lax.dot_general(
+            a_q.astype(jnp.int16), b_q.astype(jnp.int16),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int16)
+        return acc.astype(jnp.float32)
+
+    return trace_jitted(jax.jit(bad), (a_q, b_q),
+                        name="qmatmul_int8[seeded:int16_acc]",
+                        argnames=("a_q", "b_q"), envelope="w8a8")
+
+
+def _one_device_mesh():
+    """Smallest mesh carrying both named axes — enough for shard_map
+    *tracing* (the analyzers never execute the entry)."""
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def lost_psum_entry(mesh=None) -> TracedEntry:
+    """Seeded QL305 fixture: a sharded loss reduction whose psum runs over
+    the *model* axis instead of the data axis, with ``check_rep=False``
+    silencing shard_map's own replication check — the per-host loss is
+    declared replicated but never actually reduced over data parallelism,
+    so every host trains on a different objective (the classic lost psum).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.optim.compress import get_shard_map
+
+    mesh = mesh or _one_device_mesh()
+    shard_map = get_shard_map()
+
+    def local_loss(x, y):
+        err = jnp.mean((x - y) ** 2)
+        # BUG (seeded): reduces over "model", leaving "data" unreduced
+        return jax.lax.psum(err, "model")
+
+    fn = shard_map(local_loss, mesh=mesh,
+                   in_specs=(P("data"), P("data")),
+                   out_specs=P(), check_rep=False)
+    x = jnp.ones((8, 16), jnp.float32)
+    y = jnp.ones((8, 16), jnp.float32)
+    return trace_jitted(jax.jit(fn), (x, y),
+                        name="sharded_loss[seeded:lost_psum]",
+                        argnames=("x", "y"), mesh=mesh, dp=("data",))

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.envelope import assert_grid_divisible
+
 
 def _unpack_f32(codes):
     """(bk//2, bn) packed uint8 -> (bk, bn) float32 codes, pairs along K."""
@@ -108,6 +110,8 @@ def dequant_matmul(x, codes, scale, zero, *, packed: bool,
     assert block_k % 2 == 0 or not packed
     x, codes, scale, zero, Mf, Kf, Nf = _pad_mkn(
         x, codes, scale, zero, M, K, N, block_m, block_k, block_n, packed)
+    assert_grid_divisible("dequant_matmul", M=(Mf, block_m), K=(Kf, block_k),
+                          N=(Nf, block_n))
     k_steps = Kf // block_k
     grid = (Mf // block_m, Nf // block_n, k_steps)
     bkc = block_k // 2 if packed else block_k
@@ -174,6 +178,8 @@ def dequant_matmul_batched(x, codes, scale, zero, *, packed: bool,
     x, codes, scale, zero, Mf, Kf, Nf = _pad_mkn(
         x, codes, scale, zero, M, K, N, block_m, block_k, block_n, packed,
         lead=(E,))
+    assert_grid_divisible("dequant_matmul_batched", M=(Mf, block_m),
+                          K=(Kf, block_k), N=(Nf, block_n))
     k_steps = Kf // block_k
     grid = (E, Mf // block_m, Nf // block_n, k_steps)
     bkc = block_k // 2 if packed else block_k

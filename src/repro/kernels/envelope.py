@@ -1,0 +1,120 @@
+"""Shape envelopes: the serving contract each kernel-table layout is
+verified against.
+
+A :class:`ShapeEnvelope` bounds what the deploy path is allowed to feed a
+kernel — shape maxima (tokens per call, contraction size, output width,
+expert count) plus value-magnitude bounds for the float operands (activation
+magnitude, quantization-grid scale range). The bounds are *contracts*, not
+observations: quantcheck (``repro.analysis.intervals``) proves properties
+over the whole envelope — e.g. "the int8 x int8 MXU accumulator fits int32
+for every K up to ``k_max``" — and the differential verifier
+(``repro.analysis.diffcheck``) draws its shape lattice from inside it. A
+kernel call outside its envelope is therefore *unverified*, which is exactly
+what :func:`check_envelope` makes loud.
+
+Shape maxima are grounded in the model zoo (``repro.configs``): the largest
+contraction this repo ever serves is deepseek-v3's d_ff = 18432 (w_down),
+the widest output is the 256000-token vocab head, and the deepest expert
+stack is 256. Each bound keeps ~2x headroom over those so config growth
+does not silently step outside the verified region — raising a bound is an
+intentional act that re-runs the proofs against the new region (and QL301
+fails the lint if the proof no longer holds).
+
+Grid guards: :func:`assert_grid_divisible` is the explicit divisibility
+check every Pallas wrapper runs on its *padded* dims right before building
+the grid. Padding makes the guard a tautology today; the guard exists so a
+future edit that drops or reorders the padding fails immediately with the
+offending dim named, instead of letting Pallas miscompute on ragged tiles
+(and so the QL105 AST rule has a structural guard to see).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+INT32_MAX = 2**31 - 1
+INT16_MAX = 2**15 - 1
+# smallest normal float32: below this, values are subnormal and flush to
+# zero on TPU (FTZ) — a scale product down here zeroes gradients through
+# FlexRound's reciprocal rule
+F32_TINY = 1.1754944e-38
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeEnvelope:
+    """Verified operating region for one kernel-table layout."""
+    layout: str            # kernel-table layout name (trace.MATMUL_LAYOUTS)
+    m_max: int             # tokens per matmul call (batch * seq)
+    k_max: int             # contraction size (d_in)
+    n_max: int             # output width (d_out)
+    e_max: int = 1         # stacked expert count (batch_dims=1 layouts)
+    x_abs_max: float = 64.0    # |activation| bound entering the matmul
+    scale_min: float = 1e-12   # quantization-grid scale lower bound
+    scale_max: float = 256.0   # quantization-grid scale upper bound
+    code_max: int = 255        # largest integer weight code (2^bits - 1)
+
+    def contains(self, m: int, k: int, n: int, e: int = 1) -> bool:
+        return (1 <= m <= self.m_max and 1 <= k <= self.k_max
+                and 1 <= n <= self.n_max and 1 <= e <= self.e_max)
+
+
+# Zoo maxima (see repro.configs): K = d_ff 18432, N = vocab 256000,
+# E = n_experts 256. m_max bounds prefill batch*seq per call.
+_M_MAX = 65536
+_K_MAX = 32768
+_N_MAX = 524288
+
+SHAPE_ENVELOPES: Dict[str, ShapeEnvelope] = {
+    "w4_packed": ShapeEnvelope("w4_packed", _M_MAX, _K_MAX, _N_MAX,
+                               code_max=15),
+    "w4a8_packed": ShapeEnvelope("w4a8_packed", _M_MAX, _K_MAX, _N_MAX,
+                                 code_max=15),
+    "w8a8": ShapeEnvelope("w8a8", _M_MAX, _K_MAX, _N_MAX),
+    "w8_weight_only": ShapeEnvelope("w8_weight_only", _M_MAX, _K_MAX, _N_MAX),
+    "w4_odd_unpacked": ShapeEnvelope("w4_odd_unpacked", _M_MAX, _K_MAX,
+                                     _N_MAX, code_max=15),
+    "experts_batched": ShapeEnvelope("experts_batched", _M_MAX, _K_MAX,
+                                     _N_MAX, e_max=256, code_max=15),
+    # the PTQ inner loop's fused fake-quant (not a matmul: m/k/n bound the
+    # weight dims, scales bound the learned s1*s2*s3 product factors)
+    "flexround_apply": ShapeEnvelope("flexround_apply", _K_MAX, _K_MAX,
+                                     _N_MAX, x_abs_max=256.0,
+                                     scale_min=1e-6, scale_max=256.0),
+}
+
+
+def get_envelope(layout: str) -> ShapeEnvelope:
+    try:
+        return SHAPE_ENVELOPES[layout]
+    except KeyError:
+        raise KeyError(
+            f"no shape envelope registered for layout {layout!r} — every "
+            "kernel-table layout must declare its verified operating region "
+            f"(known: {sorted(SHAPE_ENVELOPES)})") from None
+
+
+def check_envelope(layout: str, m: int, k: int, n: int, e: int = 1) -> None:
+    """Raise when a shape leaves the verified region for its layout."""
+    env = get_envelope(layout)
+    if not env.contains(m, k, n, e):
+        raise ValueError(
+            f"shape (m={m}, k={k}, n={n}, e={e}) leaves the verified "
+            f"envelope of layout {layout!r} (m<={env.m_max}, k<={env.k_max}, "
+            f"n<={env.n_max}, e<={env.e_max}) — quantcheck's overflow/parity "
+            "proofs do not cover it; widen the envelope and re-run "
+            "`python -m repro.analysis.lint` to re-verify")
+
+
+def assert_grid_divisible(name: str, **dims: Tuple[int, int]) -> None:
+    """Explicit grid-divisibility guard for Pallas wrappers.
+
+    ``dims`` maps a dim name to ``(padded_size, block)``; every padded size
+    must be an exact block multiple or the grid under-covers the array and
+    Pallas silently miscomputes the ragged tail.
+    """
+    for dim, (size, block) in dims.items():
+        if block <= 0 or size % block != 0:
+            raise ValueError(
+                f"{name}: padded dim {dim}={size} is not a multiple of its "
+                f"block {block} — the Pallas grid would drop the ragged "
+                "tail; pad to a block multiple before building the grid")

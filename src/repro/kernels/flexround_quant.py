@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.envelope import assert_grid_divisible
+
 
 def _kernel(w_ref, s1_ref, s2_ref, s3_ref, z_ref, o_ref, *, qmin, qmax):
     w = w_ref[...].astype(jnp.float32)
@@ -45,6 +47,7 @@ def flexround_quant(w, s1, s2, s3, zero, *, qmin: int, qmax: int,
     zero = jnp.pad(jnp.broadcast_to(zero.astype(jnp.float32), (1, N)),
                    ((0, 0), (0, Np)))
     Mf, Nf = M + Mp, N + Np
+    assert_grid_divisible("flexround_quant", M=(Mf, block_m), N=(Nf, block_n))
     grid = (Mf // block_m, Nf // block_n)
     row_spec = pl.BlockSpec((1, block_n), lambda i, j: (0, j))
     out = pl.pallas_call(

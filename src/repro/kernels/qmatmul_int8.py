@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.envelope import assert_grid_divisible
+
 
 def _kernel(a_ref, b_ref, ascale_ref, azero_ref, bscale_ref, bzero_ref,
             colsum_ref, rowsum_ref, o_ref, acc_ref, *, k_steps, k_real):
@@ -80,6 +82,8 @@ def qmatmul_int8(a_q, b_q, a_scale, a_zero, b_scale, b_zero=None, *,
     colsum = jnp.pad(colsum, ((0, 0), (0, Np)))
     rowsum = jnp.pad(rowsum, ((0, Mp), (0, 0)))
     Mf, Kf, Nf = M + Mp, K + Kp, N + Np
+    assert_grid_divisible("qmatmul_int8", M=(Mf, block_m), K=(Kf, block_k),
+                          N=(Nf, block_n))
     k_steps = pl.cdiv(Kf, block_k)
     a_scale = jnp.broadcast_to(jnp.asarray(a_scale, jnp.float32), (1, 1))
     a_zero = jnp.broadcast_to(jnp.asarray(a_zero, jnp.float32), (1, 1))

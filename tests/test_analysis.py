@@ -1,11 +1,14 @@
 """quantlint (repro.analysis): the analyzers must flag exactly the seeded
-shipped regressions — the PR 5 ``a_state`` drop and a per-layer retrace —
-and stay quiet on the current clean code.
+shipped regressions — the PR 5 ``a_state`` drop, a per-layer retrace, an
+int16 matmul accumulator, subnormal FlexRound scale products, a lost
+shard_map psum — and stay quiet on the current clean code.
 
-The seeded bugs are real bugs this repo shipped and fixed: ``_matmul_2d``
-silently dropping ``a_state`` off the int8 path degrades serving to the
-un-snapped grid (FlexRound/LSQ state must flow end-to-end), and per-layer
-retraces are what the engine cache exists to prevent.
+The seeded bugs are real bugs this repo shipped (or nearly shipped) and
+fixed: ``_matmul_2d`` silently dropping ``a_state`` off the int8 path
+degrades serving to the un-snapped grid, per-layer retraces are what the
+engine cache exists to prevent, and the QL3xx fixtures are the numerics
+hazards quantcheck's abstract interpreter and shard checker exist to prove
+absent.
 """
 import dataclasses
 import warnings
@@ -18,7 +21,9 @@ from repro.analysis import RetraceError, no_retrace
 from repro.analysis import ast_rules, jaxpr_checks, trace
 from repro.analysis.allowlist import default_allowlist
 from repro.analysis.coverage import FALLBACK, kernel_coverage
+from repro.analysis.intervals import check_intervals
 from repro.analysis.report import AllowEntry, Finding, Report
+from repro.analysis.shardcheck import check_shard_safety
 
 
 # ------------------------------------------------------------- report layer
@@ -209,6 +214,141 @@ def test_coverage_names_conv_fallback_sites():
     assert flagged == set(conv_sites)
     # only the conv frontends fall back — every matmul layout has a kernel
     assert all(not by_site[r[0]].fallback for r in trace.MATMUL_LAYOUTS)
+
+
+# ---------------------------------------------- QL110 allowlist staleness
+def test_stale_allowlist_entry_errors_on_full_run():
+    rep = Report()
+    rep.add("QL201", "unused-input", "error", "jaxpr:e#x", "dead")
+    entries = [AllowEntry("QL201", "jaxpr:e#*", "by design"),
+               AllowEntry("QL104", "src/gone.py*", "kernel long deleted")]
+    # partial runs never audit staleness (false positives by construction)
+    assert rep.apply_allowlist(entries).by_rule("QL110") == []
+    audited = rep.apply_allowlist(entries, report_stale=True)
+    stale = audited.by_rule("QL110")
+    assert len(stale) == 1 and "QL104" in stale[0].where, audited.pretty(True)
+    assert "kernel long deleted" in stale[0].message
+    assert audited.exit_code() == 1
+
+
+# ------------------------------------------------- QL102 taint regression
+def test_ql102_quiet_on_concrete_jnp_values():
+    """Host casts of values *not* data-dependent on a tracer argument are
+    fine (they run at trace time on concrete arrays) — the old rule flagged
+    any jnp-rooted expression."""
+    src = ("import jax\n"
+           "import jax.numpy as jnp\n"
+           "def f(x):\n"
+           "    eps = float(jnp.float32(1e-6))\n"
+           "    lr = float(jnp.asarray([0.1]).max())\n"
+           "    return x * eps * lr\n"
+           "g = jax.jit(f)\n")
+    assert ast_rules.lint_source(src, "s.py").by_rule("QL102") == []
+
+
+def test_ql102_taint_flows_through_assignment():
+    src = ("import jax\n"
+           "import jax.numpy as jnp\n"
+           "def f(x):\n"
+           "    y = jnp.abs(x)\n"
+           "    z = y.sum()\n"
+           "    return int(z)\n"
+           "g = jax.jit(f)\n")
+    flagged = ast_rules.lint_source(src, "s.py").by_rule("QL102")
+    assert len(flagged) == 1 and ":6" in flagged[0].where
+
+
+# ------------------------------------- QL301/302/303 interval interpreter
+def test_intervals_flags_seeded_int16_accumulator():
+    rep = check_intervals(trace.int8_overflow_entry())
+    errs = rep.errors()
+    assert errs and all(f.rule == "QL301" for f in errs), rep.pretty(True)
+    assert any("int16" in f.message for f in errs)
+
+
+def test_intervals_proves_w8a8_accumulator_fits_envelope():
+    rep = check_intervals(trace.qtensor_matmul_entry("w8a8"))
+    assert rep.errors() == [], rep.pretty(True)
+    proofs = [f for f in rep if f.rule == "QL301" and f.severity == "info"]
+    assert proofs and "proven" in proofs[0].message, rep.pretty(True)
+
+
+def test_intervals_flags_seeded_scale_underflow():
+    rep = check_intervals(trace.flexround_apply_entry(underflow=True))
+    errs = rep.errors()
+    assert errs and all(f.rule == "QL303" for f in errs), rep.pretty(True)
+
+
+def test_intervals_flags_provable_grid_saturation():
+    f = jax.jit(lambda x: jnp.clip(jnp.round(x / 2.0), -7.0, 7.0))
+    entry = trace.trace_jitted(f, (jnp.ones((8,), jnp.float32),),
+                               name="sat", argnames=("x",),
+                               ranges=(("x", 64.0, 256.0),))
+    errs = check_intervals(entry).errors()
+    assert errs and all(f.rule == "QL302" for f in errs), errs
+
+
+def test_intervals_quiet_on_clean_entries():
+    entries = (trace.flexround_apply_entry(), trace.recon_chunk_entry(),
+               trace.probe_entry(), *trace.matmul_entries())
+    for entry in entries:
+        rep = check_intervals(entry)
+        assert rep.errors() == [], f"{entry.name}: {rep.pretty(True)}"
+
+
+# -------------------------------------------- QL305/306 shard safety
+def test_shardcheck_flags_seeded_lost_psum():
+    rep = check_shard_safety(trace.lost_psum_entry())
+    errs = rep.errors()
+    assert errs and all(f.rule == "QL305" for f in errs), rep.pretty(True)
+    assert {f.name for f in errs} == {"collective-wrong-axis", "lost-psum"}
+
+
+def test_shardcheck_quiet_on_sharded_recon():
+    if jax.device_count() < 8:
+        pytest.skip("debug mesh needs 8 devices")
+    from repro.launch.mesh import make_debug_mesh
+    entry = trace.recon_chunk_entry(mesh=make_debug_mesh())
+    rep = check_shard_safety(entry)
+    assert rep.errors() == [], rep.pretty(True)
+
+
+# ------------------------------------------------- QL304 differential
+def test_diffcheck_lattice_covers_edge_shapes():
+    from repro.analysis.diffcheck import EXPECTED_KERNELS, shape_lattice
+    for layout in EXPECTED_KERNELS:
+        lat = shape_lattice(layout)
+        assert len(lat) >= 20, (layout, len(lat))
+        ks = {k for _, _, k, _ in lat}
+        # grid-non-divisible K and (2-D layouts) multi-K-tile rows present
+        assert any(k % 128 for k in ks), layout
+        if layout != "experts_batched":
+            assert any(k > 512 for k in ks), layout
+
+
+def test_diffcheck_parity_cells_match_policy():
+    from repro.analysis.diffcheck import EXPECTED_KERNELS, check_parity
+    cells = [  # (layout, e, m, k, n, expected mode)
+        ("w4_packed", 1, 5, 64, 24, "bit-exact"),      # single tile
+        ("w8a8", 1, 5, 1024, 24, "bit-exact"),         # int32 path, 2 K tiles
+        ("w8_weight_only", 1, 5, 1024, 24, "tolerance"),  # float, 2 K tiles
+    ]
+    for layout, e, m, k, n, mode in cells:
+        row = check_parity(layout, e, m, k, n)
+        assert row.ok and row.mode == mode, row
+        assert (row.kernel_ref, row.kernel_pallas) == EXPECTED_KERNELS[layout]
+
+
+# --------------------------------------------- seeded lint-run wiring
+@pytest.mark.parametrize("bug,rule", [("int8_overflow", "QL301"),
+                                      ("scale_underflow", "QL303"),
+                                      ("lost_psum", "QL305")])
+def test_seeded_quantcheck_runs_exit_nonzero(bug, rule):
+    from repro.analysis import lint
+    rep = lint.run_analysis(jaxpr_only=True, seed_bug=bug,
+                            log=lambda *a, **k: None)
+    assert rep.exit_code() == 1
+    assert any(f.rule == rule for f in rep.errors()), rep.pretty(True)
 
 
 def test_conv_fallback_warns_once_per_site():
