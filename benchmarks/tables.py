@@ -183,9 +183,11 @@ def bench_kernels(out: List[str]):
                           f"GFLOPs={gf:.1f}"))
 
 
-def bench_serving(out: List[str]):
+def bench_token_throughput(out: List[str]):
     """Quantized serving micro-bench: tokens/s decode on the bench LM for
-    bf16 vs int8 vs int4 weights (QTensor deploy path)."""
+    bf16 vs int8 vs int4 weights (QTensor deploy path). (Named so that
+    ``--only serve`` selects ``bench_serve``, the engine benchmark, not
+    this uniform-batch row set — the row names are unchanged.)"""
     model, params = common.get_trained_lm()
     B, S = 8, 64
     tokens = jax.random.randint(jax.random.key(1), (B, S), 0,
@@ -339,6 +341,83 @@ def bench_recon(out: List[str]):
         + f";devices={n_dev};dp={axis_size(mesh, dp_axes(mesh))}"))
 
 
+def bench_serve(out: List[str]):
+    """Continuous-batching serve-engine benchmark (repro.serve).
+
+    Rows (always emitted — a family the engine cannot serve degrades to a
+    ``skipped=<reason>`` row, mirroring the recon/sharded fallback
+    contract):
+
+      serve/decode/int8-kv   sustained decode at full slot occupancy with
+                             the int8 KV cache (the serving default)
+      serve/decode/bf16-kv   same loop with the bf16 KV cache — the A/B
+                             for hbm_per_slot_MiB (int8 must be strictly
+                             below; pinned by tests/test_serve.py)
+      serve/prefill/b{N}     bucketed AOT prefill wall time per bucket
+                             actually exercised by the request mix
+
+    derived columns:
+      tokens_per_s      slots x steps / wall — sustained full-occupancy
+                        decode throughput (us_per_call is per step)
+      hbm_per_slot_MiB  bytes of KV state one slot pins, from the live
+                        cache pytree
+      compile_count     executables built at engine init (buckets + 1
+                        decode); flat in occupancy and request count —
+                        quantlint's no_retrace pins it in tier-1
+      slots             decode slot capacity of the run
+    """
+    import numpy as np
+
+    from repro.serve import KVQuantUnsupported
+    from repro.serve.engine import EngineConfig, ServeEngine
+
+    model, params = common.get_trained_lm()
+    recipe = QuantRecipe(method="rtn", w_bits=4, a_bits=None,
+                         w_granularity="per_channel", iters=1, batch_size=16)
+    qparams, _, _ = common.ptq(model, params, recipe, as_qtensor=True)
+    ctx = QuantCtx(mode="deploy", backend="auto")
+    slots, max_len, max_new, steps = 4, 64, 24, 16
+    rng = np.random.default_rng(0)
+
+    for tag, kv_quant, dtype in (("int8-kv", True, None),
+                                 ("bf16-kv", False, jnp.bfloat16)):
+        try:
+            eng = ServeEngine(model, qparams, ctx,
+                              EngineConfig(slots=slots, max_len=max_len,
+                                           prefill_group=2,
+                                           kv_quant=kv_quant, dtype=dtype))
+        except KVQuantUnsupported as e:
+            out.append(common.row(f"serve/decode/{tag}", 0.0,
+                                  f"skipped={e.reason}"))
+            continue
+        rid = 0
+        lens = (5, 6, 20, 24)  # two groups -> two buckets (8 and 32)
+        while eng.free_slots():  # fill every slot (mixed prompt lengths)
+            grp = min(len(eng.free_slots()), eng.cfg.prefill_group)
+            eng.admit([(rid + j,
+                        rng.integers(0, common.BENCH_CFG.vocab,
+                                     size=lens[(rid + j) % len(lens)],
+                                     ).astype(np.int32),
+                        max_new) for j in range(grp)])
+            rid += grp
+        eng.step()  # warm (executable is AOT, this warms allocator/caches)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            eng.step()
+        dt = time.perf_counter() - t0
+        st = eng.stats()
+        out.append(common.row(
+            f"serve/decode/{tag}", dt / steps * 1e6,
+            f"tokens_per_s={slots * steps / dt:.0f};"
+            f"hbm_per_slot_MiB={st['hbm_per_slot_MiB']:.4f};"
+            f"compile_count={st['compile_count']};slots={slots}"))
+        if kv_quant:
+            for b, pus in sorted(st["prefill_us"].items()):
+                out.append(common.row(
+                    f"serve/prefill/b{b}", pus,
+                    f"bucket={b};group={eng.cfg.prefill_group}"))
+
+
 def bench_alloc(out: List[str]):
     """Automatic bit-allocation benchmark (repro.allocate).
 
@@ -415,5 +494,5 @@ def bench_alloc(out: List[str]):
 
 ALL_TABLES = [table1_ablation, table2_weights_only, table3_w_a,
               table5_lm_w8a8, table7_llm_blockwise, fig3_grid_shifts,
-              bench_kernels, bench_serving, bench_decode, bench_recon,
-              bench_alloc]
+              bench_kernels, bench_token_throughput, bench_decode,
+              bench_recon, bench_serve, bench_alloc]

@@ -88,6 +88,11 @@ def jaxpr_entries(*, seed_bug: Optional[str] = None,
             "(run under XLA_FLAGS=--xla_force_host_platform_device_count=8)")
     if decode_smoke:
         entries.append(trace.deploy_decode_entry())
+        # the serving loop: QL201/QL203/QL207 over the engine's bucketed
+        # prefill-insert and slot decode step, with the int8 KV-scale
+        # range contract so QL303 proves the stored scales stay normal
+        entries.append(trace.serve_prefill_entry())
+        entries.append(trace.serve_decode_entry())
     return entries
 
 

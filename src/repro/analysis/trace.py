@@ -12,6 +12,9 @@ ROADMAP-level contract surfaces:
   qtensor_matmul   one entry per QTensor layout in the ROADMAP kernel table
   deploy_decode    the smoke LM's deploy-mode decode step (opt-in: builds
                    and quantizes a model)
+  serve_prefill /  the serve engine's bucketed prefill-insert and slot
+  serve_decode     decode step (opt-in; same quantized smoke LM, donated
+                   slot state, int8 KV-scale range contract for QL303)
 
 Seeded-bug variants (``drop_a_state=...``, ``per_layer=...``) deliberately
 re-introduce shipped regressions so tests can assert each analyzer flags
@@ -308,12 +311,10 @@ def matmul_entries() -> List[TracedEntry]:
 
 
 # ----------------------------------------------------------- deploy decode
-def deploy_decode_entry(arch: str = "smollm-135m",
-                        allow_unused: Tuple[str, ...] = (),
-                        ) -> TracedEntry:
-    """Quantize the smoke LM (iters=0: export-only) and trace its
-    deploy-mode decode step — every QTensor code/scale/zero leaf and every
-    LSQ deploy grid must stay live through the serving path."""
+def _deploy_smoke_lm(arch: str):
+    """Quantize the smoke LM (iters=0: export-only) and return the deploy
+    pieces — ``(cfg, model, qparams, ctx)`` — that the decode and serving
+    entries trace through."""
     from repro.configs import get_smoke_config
     from repro.core.context import QuantCtx
     from repro.core.reconstruct import quantize_blocks
@@ -330,9 +331,18 @@ def deploy_decode_entry(arch: str = "smollm-135m",
     x0, blocks, assemble = model.quant_blocks(params, cal.tokens)
     finalized, astates, _ = quantize_blocks(blocks, recipe, x0)
     qparams = assemble(finalized)
-
     ctx = QuantCtx(mode="deploy", recipe=recipe, astates=astates,
                    backend="xla")
+    return cfg, model, qparams, ctx
+
+
+def deploy_decode_entry(arch: str = "smollm-135m",
+                        allow_unused: Tuple[str, ...] = (),
+                        ) -> TracedEntry:
+    """The smoke LM's deploy-mode decode step — every QTensor
+    code/scale/zero leaf and every LSQ deploy grid must stay live through
+    the serving path."""
+    cfg, model, qparams, ctx = _deploy_smoke_lm(arch)
     batch, prompt = 2, 8
     tokens = jax.random.randint(jax.random.key(1), (batch, prompt), 0,
                                 cfg.vocab)
@@ -345,6 +355,70 @@ def deploy_decode_entry(arch: str = "smollm-135m",
         name=f"deploy_decode[{cfg.name}]",
         argnames=("params", "tokens", "cache", "pos"),
         allow_unused=allow_unused)
+
+
+# ------------------------------------------------------------ serve engine
+def _serve_kv_ranges(prefix: str) -> Tuple[Tuple[str, float, float], ...]:
+    """Value-range contract for the slot state's int8 KV cache: stored
+    scales are floored at kv_quantize's KV_SCALE_MIN (so QL303 can prove
+    no divisor/product over them is subnormal), codes live on the int8
+    grid. First match wins, so scales precede the code catch-all."""
+    from repro.kernels.envelope import get_envelope
+    env = get_envelope("serve_kv")
+    return (
+        (f"{prefix}.*scale*", env.scale_min, env.scale_max),
+        (f"{prefix}.*", -float(env.code_max), float(env.code_max)),
+    )
+
+
+def serve_prefill_entry(arch: str = "smollm-135m",
+                        bucket: int = 8) -> TracedEntry:
+    """The serve engine's bucketed prefill-insert (one bucket), traced on
+    the exact function ``ServeEngine`` AOT-compiles: donated slot state
+    (QL203 aliasing), every KV scale live (QL201), and the int8 KV scale
+    range contract (QL303)."""
+    from repro.serve import engine as seng
+
+    cfg, model, qparams, ctx = _deploy_smoke_lm(arch)
+    ecfg = seng.EngineConfig(slots=2, max_len=16, prefill_group=2,
+                             kv_quant=True, min_bucket=8)
+    state = seng.init_state(model, ecfg)
+    G = ecfg.prefill_group
+    fn = jax.jit(seng.make_prefill(model, ctx, ecfg, bucket),
+                 donate_argnums=(1,))
+    tokens = jax.random.randint(jax.random.key(2), (G, bucket), 0,
+                                cfg.vocab, dtype=jnp.int32)
+    true_len = jnp.full((G,), bucket, jnp.int32)
+    slot_ids = jnp.arange(G, dtype=jnp.int32)
+    max_new = jnp.full((G,), 4, jnp.int32)
+    return trace_jitted(
+        fn, (qparams, state, tokens, true_len, slot_ids, max_new),
+        name=f"serve_prefill[{cfg.name}][b{bucket}]",
+        argnames=("params", "state", "tokens", "true_len", "slot_ids",
+                  "max_new"),
+        donate_argnums=(1,), ranges=_serve_kv_ranges("state.cache"),
+        envelope="serve_kv")
+
+
+def serve_decode_entry(arch: str = "smollm-135m") -> TracedEntry:
+    """The serve engine's slot decode step (donated KV-cache carry,
+    active-masked position/budget update) — the loop the engine runs once
+    per emitted token, so a dead scale invar or a donation alias here is a
+    production serving bug."""
+    from repro.serve import engine as seng
+
+    cfg, model, qparams, ctx = _deploy_smoke_lm(arch)
+    ecfg = seng.EngineConfig(slots=2, max_len=16, prefill_group=2,
+                             kv_quant=True, min_bucket=8)
+    state = seng.init_state(model, ecfg)
+    meta = {k: state[k] for k in ("tokens", "pos", "remaining")}
+    fn = jax.jit(seng.make_decode(model, ctx, ecfg), donate_argnums=(1,))
+    return trace_jitted(
+        fn, (qparams, state["cache"], meta),
+        name=f"serve_decode[{cfg.name}]",
+        argnames=("params", "cache", "meta"),
+        donate_argnums=(1,), ranges=_serve_kv_ranges("cache"),
+        envelope="serve_kv")
 
 
 # ------------------------------------------------- quantcheck (QL3xx) entries

@@ -80,6 +80,16 @@ SHAPE_ENVELOPES: Dict[str, ShapeEnvelope] = {
     "flexround_apply": ShapeEnvelope("flexround_apply", _K_MAX, _K_MAX,
                                      _N_MAX, x_abs_max=256.0,
                                      scale_min=1e-6, scale_max=256.0),
+    # the serve engine's int8 KV cache (repro.serve.kv): m bounds queries
+    # per decode call (slots), k bounds the attention contractions (cached
+    # positions x head_dim — max_len dominates), n bounds d_model. The
+    # scale floor is kv_quantize's absmax floor KV_EPS/KV_QMAX = 1e-6/127
+    # (~7.9e-9, >> F32_TINY, so QL303 proves the stored scales never go
+    # subnormal); the ceiling is x_abs_max/127 for activations inside the
+    # |x| <= 64 contract.
+    "serve_kv": ShapeEnvelope("serve_kv", _M_MAX, 8192, _N_MAX,
+                              x_abs_max=64.0, scale_min=1e-6 / 127.0,
+                              scale_max=64.0 / 127.0, code_max=127),
 }
 
 

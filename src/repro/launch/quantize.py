@@ -88,6 +88,20 @@ def main():
                     help="after quantization, run a short deploy-mode decode "
                          "through the kernel serving path and report "
                          "us/step + weight bytes moved")
+    ap.add_argument("--serve", action="store_true",
+                    help="after quantization, run the continuous-batching "
+                         "serve engine (bucketed AOT prefill, slot decode, "
+                         "int8 KV) on a synthetic request stream and report "
+                         "tokens/s, HBM/slot, compile_count")
+    ap.add_argument("--serve-slots", type=int, default=4,
+                    help="decode slots for --serve")
+    ap.add_argument("--serve-requests", type=int, default=8,
+                    help="synthetic request count for --serve")
+    ap.add_argument("--serve-max-new", type=int, default=16,
+                    help="tokens generated per request for --serve")
+    ap.add_argument("--no-kv-quant", action="store_true",
+                    help="serve with the fp KV cache instead of the int8 "
+                         "default (A/B the HBM-per-slot win)")
     ap.add_argument("--analyze", action="store_true",
                     help="after quantization, run the quantlint analyzers "
                          "(repro.analysis): AST rules over src/, jaxpr "
@@ -201,6 +215,13 @@ def main():
         serve_smoke(model, qparams, astates, recipe, cfg,
                     backend=args.backend)
 
+    if args.serve:
+        serve_engine_run(model, qparams, astates, recipe, cfg,
+                         backend=args.backend, slots=args.serve_slots,
+                         requests=args.serve_requests,
+                         max_new=args.serve_max_new,
+                         kv_quant=not args.no_kv_quant)
+
     if args.analyze:
         from repro.analysis.lint import run_analysis
         rep = run_analysis()
@@ -306,8 +327,12 @@ def serve_smoke(model, qparams, astates, recipe, cfg, *, backend: str = "auto",
     from repro.core.context import QuantCtx
     from repro.core.qtensor import tree_weight_bytes
 
-    if not hasattr(model, "decode_step"):
-        print(f"serve-smoke: {cfg.name} has no decode path; skipping")
+    from repro.serve.smoke import serve_capability
+
+    ok, reason = serve_capability(model)
+    if not ok:
+        # machine-readable skip (same contract as the serve bench row)
+        print(f"serve-smoke: skipped arch={cfg.name} reason={reason}")
         return float("nan")
     ctx = QuantCtx(mode="deploy", recipe=recipe, astates=astates,
                    backend=backend)
@@ -329,6 +354,58 @@ def serve_smoke(model, qparams, astates, recipe, cfg, *, backend: str = "auto",
     print(f"serve-smoke[{backend}]: {us:.1f} us/step, "
           f"weight bytes/step {wbytes / 2**20:.2f} MiB")
     return us
+
+
+def serve_engine_run(model, qparams, astates, recipe, cfg, *,
+                     backend: str = "auto", slots: int = 4,
+                     requests: int = 8, max_new: int = 16,
+                     kv_quant: bool = True):
+    """Run the continuous-batching engine on a synthetic request stream.
+
+    Deploy-mode weights (kernel dispatch per ``backend``), bucketed AOT
+    prefill, slot decode with the int8 KV cache by default. Prints sustained
+    tokens/s at full occupancy, HBM per slot, per-bucket prefill times, and
+    the (flat) compile count. Degrades with a machine-readable skip reason
+    on families the slot layout cannot serve."""
+    import time
+
+    import numpy as np
+
+    from repro.core.context import QuantCtx
+    from repro.serve import EngineConfig, Request, Scheduler, ServeEngine
+    from repro.serve.smoke import serve_capability
+
+    ok, reason = serve_capability(model, engine=True, kv_quant=kv_quant)
+    if not ok:
+        print(f"serve: skipped arch={cfg.name} reason={reason}")
+        return None
+    ctx = QuantCtx(mode="deploy", recipe=recipe, astates=astates,
+                   backend=backend)
+    max_len = max(32, 2 * max_new)
+    engine = ServeEngine(model, qparams, ctx,
+                         EngineConfig(slots=slots, max_len=max_len,
+                                      prefill_group=2, kv_quant=kv_quant))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab,
+                                        size=int(rng.integers(4, 16)),
+                                        ).astype(np.int32),
+                    max_new=max_new)
+            for i in range(requests)]
+    t0 = time.perf_counter()
+    with Scheduler(engine) as sched:
+        outs = sched.run(reqs)
+    dt = time.perf_counter() - t0
+    st = engine.stats()
+    n_tok = sum(len(v) for v in outs.values())
+    pf = " ".join(f"b{b}={us:.0f}us" for b, us in sorted(st["prefill_us"].items()))
+    print(f"serve[{backend}] kv={'int8' if kv_quant else 'fp'}: "
+          f"{requests} requests x {max_new} tokens on {slots} slots -> "
+          f"{n_tok / dt:.1f} tokens/s, "
+          f"hbm_per_slot {st['hbm_per_slot_MiB']:.4f} MiB, "
+          f"compile_count {st['compile_count']} "
+          f"(buckets {st['buckets']}), prefill {pf}")
+    return st
 
 
 if __name__ == "__main__":

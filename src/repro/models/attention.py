@@ -148,16 +148,20 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     """Single-token decode: q (B,1,Hq,D) vs cache (B,Smax,Hkv,D).
 
     ``pos`` is the index of the current token (cache holds pos+1 valid
-    entries including the freshly-inserted one).
+    entries including the freshly-inserted one) — a scalar for a uniform
+    batch, or (B,) when each row sits at its own depth (the serving
+    engine's slot-based decode).
     """
     B, _, Hq, D = q.shape
     Smax = k_cache.shape[1]
     scale = D**-0.5
     s = _gqa_scores(q, k_cache) * scale  # (B,Hkv,G,1,Smax)
     k_pos = jnp.arange(Smax)
-    valid = k_pos <= pos
+    pos = jnp.asarray(pos)
+    posb = jnp.broadcast_to(pos.reshape(-1, 1) if pos.ndim else pos, (B, 1))
+    valid = k_pos[None, :] <= posb  # (B, Smax)
     if window > 0:
-        valid &= k_pos > pos - window
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        valid &= k_pos[None, :] > posb - window
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     return _gqa_out(p, v_cache).astype(q.dtype)

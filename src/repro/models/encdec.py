@@ -15,6 +15,7 @@ from repro.core.context import QuantCtx
 from repro.core.reconstruct import BlockHandle, Site
 from repro.models import attention as attn
 from repro.models import common
+from repro.serve import kv as skv
 
 
 def _sinusoid(S: int, D: int) -> jax.Array:
@@ -130,26 +131,43 @@ class EncDecLM:
                    self_kv=None, cross_kv=None, pos=None):
         cfg = self.cfg
         z = common.apply_norm("layernorm", h, p_l["ln1"])
+        H, Dh = cfg.n_heads, cfg.head_dim
         if self_kv is None:
-            a, skv = _mha(p_l["attn"], z, z, ctx, f"{name}.attn", True, cfg)
-        else:  # decode: self_kv = (k_cache, v_cache) with token inserted
+            a, self_out = _mha(p_l["attn"], z, z, ctx, f"{name}.attn", True,
+                               cfg)
+        else:  # decode: self_kv = (k, v) or int8 (k, k_scale, v, v_scale)
             B = z.shape[0]
-            H, Dh = cfg.n_heads, cfg.head_dim
             q = ctx.linear(f"{name}.attn.wq", z, p_l["attn"]["wq"],
                            p_l["attn"]["bq"]).reshape(B, 1, H, Dh)
-            a = attn.decode_attention(q, self_kv[0], self_kv[1], pos)
+            if len(self_kv) == 4:
+                a = skv.int8_decode_attention(q, *self_kv, pos)
+            else:
+                a = attn.decode_attention(q, self_kv[0], self_kv[1], pos)
             a = ctx.linear(f"{name}.attn.wo", a.reshape(B, 1, H * Dh),
                            p_l["attn"]["wo"], p_l["attn"]["bo"])
-            skv = None
+            self_out = None
         h = h + a
         z = common.apply_norm("layernorm", h, p_l["ln_x"])
-        xa, xkv = _mha(p_l["xattn"], z, enc_out, ctx, f"{name}.xattn", False,
-                       cfg, kv_override=cross_kv)
+        if cross_kv is not None and len(cross_kv) == 4:
+            # int8 cross cache: every encoder position is valid, so the
+            # bidirectional Sq=1 attention is decode_attention at the last
+            # encoder index
+            B = z.shape[0]
+            q = ctx.linear(f"{name}.xattn.wq", z, p_l["xattn"]["wq"],
+                           p_l["xattn"]["bq"]).reshape(B, 1, H, Dh)
+            xa = skv.int8_decode_attention(q, *cross_kv,
+                                           cross_kv[0].shape[1] - 1)
+            xa = ctx.linear(f"{name}.xattn.wo", xa.reshape(B, 1, H * Dh),
+                            p_l["xattn"]["wo"], p_l["xattn"]["bo"])
+            xkv = None
+        else:
+            xa, xkv = _mha(p_l["xattn"], z, enc_out, ctx, f"{name}.xattn",
+                           False, cfg, kv_override=cross_kv)
         h = h + xa
         z = common.apply_norm("layernorm", h, p_l["ln2"])
         h = h + common.mlp(p_l["mlp"], z, ctx, f"{name}.mlp", "gelu")
         if collect:
-            return h, (skv, xkv)
+            return h, (self_out, xkv)
         return h
 
     def decode_full(self, params, tokens, enc_out, ctx, collect=False):
@@ -178,10 +196,22 @@ class EncDecLM:
         return ce, {"ce": ce}
 
     # -------------------------------------------------------------- serve
-    def init_cache(self, batch: int, max_len: int, enc_len: int, dtype=None):
+    def init_cache(self, batch: int, max_len: int, enc_len: int, dtype=None,
+                   kv_quant: bool = False):
+        """kv_quant quantizes both the growing self-attention cache and the
+        static cross (encoder) cache to int8 per-(token, head) absmax."""
         cfg = self.cfg
+        skv.check_kv_quant_supported(cfg, kv_quant)
         dtype = dtype or jnp.dtype(cfg.dtype)
         L, H, Dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+        if kv_quant:
+            cache = {}
+            for nm, S in (("k", max_len), ("v", max_len),
+                          ("xk", enc_len), ("xv", enc_len)):
+                cache[nm] = jnp.zeros((L, batch, S, H, Dh), jnp.int8)
+                cache[f"{nm}_scale"] = jnp.zeros((L, batch, S, H, 1),
+                                                 jnp.float32)
+            return cache
         return {
             "k": jnp.zeros((L, batch, max_len, H, Dh), dtype),
             "v": jnp.zeros((L, batch, max_len, H, Dh), dtype),
@@ -193,6 +223,16 @@ class EncDecLM:
         enc_out = self.encode(params, frames, ctx)
         x, kvs = self.decode_full(params, tokens, enc_out, ctx, collect=True)
         (sk, sv), (xk, xv) = kvs[0], kvs[1]
+        if "k_scale" in cache:
+            for nm, t in (("k", sk), ("v", sv)):
+                codes, scl = skv.kv_quantize(t)
+                cache[nm] = jax.lax.dynamic_update_slice(
+                    cache[nm], codes, (0, 0, 0, 0, 0))
+                cache[f"{nm}_scale"] = jax.lax.dynamic_update_slice(
+                    cache[f"{nm}_scale"], scl, (0, 0, 0, 0, 0))
+            for nm, t in (("xk", xk), ("xv", xv)):
+                cache[nm], cache[f"{nm}_scale"] = skv.kv_quantize(t)
+            return x[:, -1:], cache
         cache["k"] = jax.lax.dynamic_update_slice(
             cache["k"], sk.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
         cache["v"] = jax.lax.dynamic_update_slice(
@@ -218,16 +258,30 @@ class EncDecLM:
                 B, 1, H, Dh)
             v = ctx.linear("dec.attn.wv", z, p_l["attn"]["wv"],
                            p_l["attn"]["bv"]).reshape(B, 1, H, Dh)
-            cache["k"] = jax.lax.dynamic_update_slice(
-                cache["k"], k[None].astype(cache["k"].dtype), (i, 0, pos, 0, 0))
-            cache["v"] = jax.lax.dynamic_update_slice(
-                cache["v"], v[None].astype(cache["v"].dtype), (i, 0, pos, 0, 0))
-            self_kv = (
-                jax.lax.dynamic_index_in_dim(cache["k"], i, 0, False),
-                jax.lax.dynamic_index_in_dim(cache["v"], i, 0, False))
-            cross_kv = (
-                jax.lax.dynamic_index_in_dim(cache["xk"], i, 0, False),
-                jax.lax.dynamic_index_in_dim(cache["xv"], i, 0, False))
+            if "k_scale" in cache:
+                for nm, t in (("k", k), ("v", v)):
+                    codes, scl = skv.kv_quantize(t)
+                    cache[nm] = jax.lax.dynamic_update_slice(
+                        cache[nm], codes[None], (i, 0, pos, 0, 0))
+                    cache[f"{nm}_scale"] = jax.lax.dynamic_update_slice(
+                        cache[f"{nm}_scale"], scl[None], (i, 0, pos, 0, 0))
+                self_names = ("k", "k_scale", "v", "v_scale")
+                cross_names = ("xk", "xk_scale", "xv", "xv_scale")
+            else:
+                cache["k"] = jax.lax.dynamic_update_slice(
+                    cache["k"], k[None].astype(cache["k"].dtype),
+                    (i, 0, pos, 0, 0))
+                cache["v"] = jax.lax.dynamic_update_slice(
+                    cache["v"], v[None].astype(cache["v"].dtype),
+                    (i, 0, pos, 0, 0))
+                self_names = ("k", "v")
+                cross_names = ("xk", "xv")
+            self_kv = tuple(
+                jax.lax.dynamic_index_in_dim(cache[nm], i, 0, False)
+                for nm in self_names)
+            cross_kv = tuple(
+                jax.lax.dynamic_index_in_dim(cache[nm], i, 0, False)
+                for nm in cross_names)
             h = self._dec_layer(p_l, h, None, ctx, "dec", self_kv=self_kv,
                                 cross_kv=cross_kv, pos=pos)
             return (h, cache), None

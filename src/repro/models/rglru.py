@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.core.reconstruct import BlockHandle, Site
 from repro.models import attention as attn
 from repro.models import common
+from repro.serve import kv as skv
 
 C_RGLRU = 8.0
 
@@ -271,8 +272,10 @@ class GriffinLM:
                                         batch.get("mask"), self.cfg.xent_chunk)
         return ce, {"ce": ce}
 
-    def init_cache(self, batch: int, max_len: int, dtype=None):
+    def init_cache(self, batch: int, max_len: int, dtype=None,
+                   kv_quant: bool = False):
         cfg = self.cfg
+        skv.check_kv_quant_supported(cfg, kv_quant, family="hybrid")
         dtype = dtype or jnp.dtype(cfg.dtype)
         W = min(cfg.local_window or max_len, max_len)
         cache: Dict[str, Any] = {"layers": []}

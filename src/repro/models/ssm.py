@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.core.context import QuantCtx
 from repro.core.reconstruct import BlockHandle, Site
 from repro.models import common
+from repro.serve import kv as skv
 
 
 def _dims(cfg):
@@ -217,8 +218,10 @@ class MambaLM:
                                         batch.get("mask"), self.cfg.xent_chunk)
         return ce, {"ce": ce}
 
-    def init_cache(self, batch: int, max_len: int, dtype=None):
+    def init_cache(self, batch: int, max_len: int, dtype=None,
+                   kv_quant: bool = False):
         cfg = self.cfg
+        skv.check_kv_quant_supported(cfg, kv_quant, family="ssm")
         d_inner, n_heads, conv_dim = _dims(cfg)
         L = cfg.n_layers
         return {

@@ -19,21 +19,26 @@ from repro.core.context import QuantCtx
 from repro.core.reconstruct import BlockHandle, Site
 from repro.models import attention as attn
 from repro.models import common, mla, moe
+from repro.serve import kv as skv
 
 MTP_WEIGHT = 0.3
 
-
-def _kv_quantize(t: jax.Array):
-    """Per-(token, head) absmax int8 quantization of K/V entries."""
-    t32 = t.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(t32), axis=-1, keepdims=True),
-                        1e-6) / 127.0
-    codes = jnp.clip(jnp.round(t32 / scale), -127, 127).astype(jnp.int8)
-    return codes, scale
+# promoted to repro.serve.kv (shared with encdec + the serving engine);
+# kept as module aliases for callers of the original private names
+_kv_quantize = skv.kv_quantize
+_kv_dequantize = skv.kv_dequantize
 
 
-def _kv_dequantize(codes: jax.Array, scale: jax.Array, dtype) -> jax.Array:
-    return (codes.astype(jnp.float32) * scale).astype(dtype)
+def _cache_write(buf, li, pos, val):
+    """Insert one token's (B, 1, ...) entry into layer ``li`` of a
+    (L, B, Smax, ...) cache at ``pos`` — a scalar (uniform batch) or (B,)
+    (serving slots, each at its own depth)."""
+    val = val.astype(buf.dtype)
+    pos = jnp.asarray(pos)
+    if pos.ndim:
+        return buf.at[li, jnp.arange(val.shape[0]), pos].set(val[:, 0])
+    return jax.lax.dynamic_update_slice(
+        buf, val[None], (li, 0, pos) + (0,) * (buf.ndim - 3))
 
 
 # ----------------------------------------------------------------- params
@@ -249,6 +254,7 @@ class TransformerLM:
         """kv_quant: int8 per-(token, head) absmax-quantized KV cache —
         halves the decode memory-roofline term (beyond-paper; §Perf)."""
         cfg = self.cfg
+        skv.check_kv_quant_supported(cfg, kv_quant)
         dtype = dtype or jnp.dtype(cfg.dtype)
         L = cfg.n_layers
         if cfg.use_mla:
@@ -277,8 +283,17 @@ class TransformerLM:
         kind = "moe" if cfg.is_moe else "dense"
         return [(params["layers"], kind, cfg.n_layers)]
 
-    def prefill(self, params, tokens, cache, ctx, extra_embeds=None):
-        """Run full sequence, fill cache; returns (last hidden, cache)."""
+    def prefill(self, params, tokens, cache, ctx, extra_embeds=None,
+                true_len=None):
+        """Run full sequence, fill cache; returns (last hidden, cache).
+
+        ``true_len`` (B,) optionally marks each row's real prompt length
+        inside a right-padded bucket: the returned hidden is gathered at
+        ``true_len - 1`` instead of the last column. Causal masking makes
+        hidden states at real positions bit-identical to an unpadded run
+        (padded keys sit strictly in the future of every real query), so
+        bucketed prefill costs no accuracy — only the padded FLOPs.
+        """
         cfg = self.cfg
         x, _, kvs = self.backbone(params, tokens, ctx, extra_embeds,
                                   collect_kv=True)
@@ -308,15 +323,27 @@ class TransformerLM:
                         cache["v"], v.astype(cache["v"].dtype),
                         (off, 0, 0, 0, 0))
             off += n
+        if true_len is not None:
+            B = x.shape[0]
+            idx = jnp.asarray(true_len, jnp.int32) - 1
+            x = x[jnp.arange(B), idx][:, None]
+            return x, cache
         return x[:, -1:], cache
 
     def decode_step(self, params, token, cache, pos, ctx):
-        """token (B,1) int32; pos scalar int32 (absolute position of token).
-        Returns (logits (B,1,V), cache)."""
+        """token (B,1) int32; pos int32 — scalar (uniform batch) or (B,)
+        per-row absolute positions (serving slots). Returns
+        (logits (B,1,V), cache)."""
         cfg = self.cfg
+        pos = jnp.asarray(pos)
+        if pos.ndim and cfg.use_mla:
+            raise skv.unsupported(
+                "mla", f"{cfg.name}: MLA decode takes a uniform scalar "
+                "position; slot-based serving is not supported")
         x = common.embed_tokens(params["embed"], token, cfg.emb_mult)
         B = x.shape[0]
-        pos_arr = jnp.full((B, 1), pos)
+        pos_arr = (pos.reshape(B, 1) if pos.ndim
+                   else jnp.full((B, 1), pos))
         sin, cos = common.rope_sin_cos(
             pos_arr, cfg.qk_rope_dim if cfg.use_mla else cfg.head_dim,
             cfg.rope_theta)
@@ -341,12 +368,8 @@ class TransformerLM:
             if cfg.use_mla:
                 ckv, kr = mla._kv_latent(p_l["attn"], z, cfg, ctx, "layers",
                                          sin, cos)
-                cache["ckv"] = jax.lax.dynamic_update_slice(
-                    cache["ckv"], ckv[None].astype(cache["ckv"].dtype),
-                    (li, 0, pos, 0))
-                cache["kr"] = jax.lax.dynamic_update_slice(
-                    cache["kr"], kr[None].astype(cache["kr"].dtype),
-                    (li, 0, pos, 0))
+                cache["ckv"] = _cache_write(cache["ckv"], li, pos, ckv)
+                cache["kr"] = _cache_write(cache["kr"], li, pos, kr)
                 a_out = mla.mla_decode(
                     p_l["attn"], z, cfg, ctx, "layers", sin, cos,
                     jax.lax.dynamic_index_in_dim(cache["ckv"], li, 0, False),
@@ -366,33 +389,26 @@ class TransformerLM:
                 k = common.apply_rope(k, sin, cos)
                 if "k_scale" in cache:
                     for nm, t in (("k", k), ("v", v)):
-                        codes, scl = _kv_quantize(t)
-                        cache[nm] = jax.lax.dynamic_update_slice(
-                            cache[nm], codes[None], (li, 0, pos, 0, 0))
-                        cache[f"{nm}_scale"] = jax.lax.dynamic_update_slice(
-                            cache[f"{nm}_scale"], scl[None],
-                            (li, 0, pos, 0, 0))
-                    k_l = _kv_dequantize(
-                        jax.lax.dynamic_index_in_dim(cache["k"], li, 0, False),
-                        jax.lax.dynamic_index_in_dim(cache["k_scale"], li, 0,
-                                                     False), k.dtype)
-                    v_l = _kv_dequantize(
-                        jax.lax.dynamic_index_in_dim(cache["v"], li, 0, False),
-                        jax.lax.dynamic_index_in_dim(cache["v_scale"], li, 0,
-                                                     False), v.dtype)
+                        codes, scl = skv.kv_quantize(t)
+                        cache[nm] = _cache_write(cache[nm], li, pos, codes)
+                        cache[f"{nm}_scale"] = _cache_write(
+                            cache[f"{nm}_scale"], li, pos, scl)
+                    layer = [jax.lax.dynamic_index_in_dim(cache[nm], li, 0,
+                                                          False)
+                             for nm in ("k", "k_scale", "v", "v_scale")]
+                    # dequant-free: scales fold in after the contractions,
+                    # the cache never rematerializes in k.dtype
+                    o = skv.int8_decode_attention(q, *layer, pos,
+                                                  window=cfg.local_window)
                 else:
-                    cache["k"] = jax.lax.dynamic_update_slice(
-                        cache["k"], k[None].astype(cache["k"].dtype),
-                        (li, 0, pos, 0, 0))
-                    cache["v"] = jax.lax.dynamic_update_slice(
-                        cache["v"], v[None].astype(cache["v"].dtype),
-                        (li, 0, pos, 0, 0))
+                    cache["k"] = _cache_write(cache["k"], li, pos, k)
+                    cache["v"] = _cache_write(cache["v"], li, pos, v)
                     k_l = jax.lax.dynamic_index_in_dim(cache["k"], li, 0,
                                                        False)
                     v_l = jax.lax.dynamic_index_in_dim(cache["v"], li, 0,
                                                        False)
-                o = attn.decode_attention(q, k_l, v_l, pos,
-                                          window=cfg.local_window)
+                    o = attn.decode_attention(q, k_l, v_l, pos,
+                                              window=cfg.local_window)
                 a_out = ctx.linear("layers.wo", o.reshape(B, 1, H * Dh),
                                    a["wo"])
             h = h + a_out * cfg.resid_mult

@@ -1,0 +1,40 @@
+"""Quantized continuous-batching serving engine (ROADMAP Open item #1).
+
+Layout:
+  kv.py        int8 KV cache: quantizer, dequant-free decode attention,
+               HBM accounting, KVQuantUnsupported
+  engine.py    bucketed AOT prefill + slot-based decode over the deploy path
+  scheduler.py host-side admission queue + async detokenize thread
+  smoke.py     machine-readable serve-capability probe shared by
+               launch/quantize and benchmarks
+
+``repro.serve.kv`` must stay importable from ``repro.models`` (the model
+families quantize-on-append through it), so this package imports models-side
+code lazily: ``from repro.serve import ServeEngine`` works, but merely
+importing ``repro.serve`` (as the models do for ``kv``) pulls in nothing
+beyond jax.
+"""
+from repro.serve.kv import (  # noqa: F401
+    KV_SCALE_MIN,
+    KVQuantUnsupported,
+    hbm_per_slot_mib,
+    int8_decode_attention,
+    kv_dequantize,
+    kv_quantize,
+)
+
+_LAZY = {
+    "ServeEngine": "repro.serve.engine",
+    "EngineConfig": "repro.serve.engine",
+    "Scheduler": "repro.serve.scheduler",
+    "Request": "repro.serve.scheduler",
+    "serve_capability": "repro.serve.smoke",
+}
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)

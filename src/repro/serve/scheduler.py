@@ -1,0 +1,122 @@
+"""Host-side scheduler: admission queue + async detokenize thread.
+
+The device loop (``ServeEngine.admit`` / ``.step``) must never wait on the
+host, so everything host-flavored lives here:
+
+* **Admission queue** — requests land in a FIFO backlog and are admitted
+  whenever slots free up, up to ``prefill_group`` per prefill call. The
+  admission is *straggler-tolerant*: a half-empty group ships immediately
+  as dummy-padded rows instead of waiting for the backlog to fill the
+  group (the compiled prefill has fixed shapes either way), so one slow
+  producer cannot stall every other user's first token.
+
+* **Async detokenize thread** — emitted token ids go into a
+  ``queue.Queue`` drained by a daemon thread that runs the (potentially
+  slow, pure-Python) ``detokenize`` callback; the decode loop only ever
+  pays a lock-free put. Ordering per request id is preserved (single
+  consumer thread).
+
+``run()`` drives the whole lifecycle for an offline batch; ``submit`` +
+``pump`` expose the incremental interface for a live loop.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray          # (n,) int32 prompt
+    max_new: int = 16
+    detok: List[int] = field(default_factory=list)
+
+
+_STOP = object()
+
+
+class Scheduler:
+    def __init__(self, engine,
+                 detokenize: Optional[Callable[[int, int], None]] = None):
+        self.engine = engine
+        self.backlog: "queue.Queue[Request]" = queue.Queue()
+        self.outputs: Dict[int, List[int]] = {}
+        self._detok_fn = detokenize
+        self._detok_q: "queue.Queue" = queue.Queue()
+        self._detok_thread = threading.Thread(target=self._detok_loop,
+                                              daemon=True)
+        self._detok_thread.start()
+        self._pending = 0  # submitted but not yet fully emitted
+
+    # ---------------------------------------------------------- detok side
+    def _detok_loop(self):
+        while True:
+            item = self._detok_q.get()
+            try:
+                if item is _STOP:
+                    return
+                rid, tok = item
+                self.outputs.setdefault(rid, []).append(tok)
+                if self._detok_fn is not None:
+                    self._detok_fn(rid, tok)
+            finally:
+                self._detok_q.task_done()
+
+    def _emit(self, pairs):
+        for rid, tok in pairs:
+            self._detok_q.put((rid, tok))
+
+    # --------------------------------------------------------- device side
+    def submit(self, req: Request):
+        self.backlog.put(req)
+        self._pending += 1
+
+    def _admit_some(self):
+        """Fill free slots from the backlog — at most one prefill call, at
+        most ``prefill_group`` requests, shipped even if the group is
+        short (straggler tolerance)."""
+        eng = self.engine
+        room = min(len(eng.free_slots()), eng.cfg.prefill_group)
+        batch = []
+        while room > 0 and not self.backlog.empty():
+            batch.append(self.backlog.get_nowait())
+            room -= 1
+        if batch:
+            self._emit(eng.admit([(r.rid, r.tokens, r.max_new)
+                                  for r in batch]))
+
+    def pump(self) -> bool:
+        """One scheduling round: admit, then one decode step across slots.
+        Returns False when there is nothing left to do."""
+        eng = self.engine
+        self._admit_some()
+        if eng.active:
+            self._emit(eng.step())
+        for _rid, _toks in eng.drain_finished():
+            self._pending -= 1
+        return eng.active > 0 or not self.backlog.empty()
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Offline batch: submit everything, pump to completion, join the
+        detokenize thread's queue, return per-request token lists."""
+        for r in requests:
+            self.submit(r)
+        while self._pending > 0:
+            self.pump()
+        self._detok_q.join()  # all handed tokens consumed by the thread
+        return self.outputs
+
+    def close(self):
+        self._detok_q.put(_STOP)
+        self._detok_thread.join(timeout=5)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,47 @@
+"""Machine-readable serve-capability probe.
+
+One predicate shared by ``launch/quantize`` (``--serve`` / ``--serve-smoke``
+skip paths) and ``benchmarks.run --only serve`` so a model that cannot be
+served degrades the same way everywhere: a ``(False, reason)`` with a
+stable ``key:detail`` reason string, never a silent ``print``-and-skip and
+never a vanished bench row (mirroring the ``recon/sharded`` fallback
+contract).
+
+Reasons:
+  ``no_decode_path:<family>``        model has no ``decode_step``
+  ``unsupported_family:<family>``    slot engine needs the transformer
+                                     KV layout (dense / moe / vlm)
+  ``unsupported_layout:mla``         MLA's latent cache has no per-head
+                                     int8 layout and no vector-pos decode
+  ``kv_quant_unsupported:<family>``  family cannot hold an int8 KV cache
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+OK = "ok"
+ENGINE_FAMILIES = ("dense", "moe", "vlm")
+
+
+def serve_capability(model, *, engine: bool = False,
+                     kv_quant: bool = False) -> Tuple[bool, str]:
+    """Can ``model`` be served? ``engine=False`` asks only for the plain
+    uniform-batch decode loop (``serve_smoke``); ``engine=True`` asks for
+    the slot-based continuous-batching engine."""
+    cfg = model.cfg
+    family = getattr(cfg, "family", "?")
+    if not hasattr(model, "decode_step"):
+        return False, f"no_decode_path:{family}"
+    if not engine:
+        # encdec *does* support kv_quant; only state-space families lack a
+        # KV cache entirely, and MLA's latent layout has no per-head scales
+        if kv_quant and family in ("ssm", "hybrid"):
+            return False, f"kv_quant_unsupported:{family}"
+        if kv_quant and getattr(cfg, "use_mla", False):
+            return False, "kv_quant_unsupported:mla"
+        return True, OK
+    if family not in ENGINE_FAMILIES:
+        return False, f"unsupported_family:{family}"
+    if getattr(cfg, "use_mla", False):
+        return False, "unsupported_layout:mla"
+    return True, OK

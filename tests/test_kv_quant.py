@@ -32,3 +32,30 @@ def test_int8_kv_cache_decode_close_to_bf16():
     # and greedy tokens should agree
     np.testing.assert_array_equal(outs[True].argmax(-1),
                                   outs[False].argmax(-1))
+
+
+def test_int8_kv_greedy_horizon_64_steps():
+    """Long-horizon serving contract: 64 autoregressive greedy steps on
+    the int8 cache emit exactly the fp-cache token stream — quantization
+    error from quantize-on-append must not compound into a divergent
+    trajectory (each step re-reads every cached position)."""
+    H, P = 64, 8
+    cfg = get_smoke_config("qwen2.5-14b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    prompt = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab)
+    ctx = QuantCtx(mode="fp")
+
+    trajs = {}
+    for quant in (False, True):
+        cache = model.init_cache(B, P + H, kv_quant=quant)
+        _, cache = model.prefill(params, prompt[:, :-1], cache, ctx)
+        step = jax.jit(
+            lambda p, t, c, pos: model.decode_step(p, t, c, pos, ctx))
+        tok, toks = prompt[:, -1:], []
+        for i in range(H):
+            logits, cache = step(params, tok, cache, jnp.int32(P - 1 + i))
+            tok = logits[:, -1].argmax(-1)[:, None].astype(jnp.int32)
+            toks.append(np.asarray(tok[:, 0]))
+        trajs[quant] = np.stack(toks)
+    np.testing.assert_array_equal(trajs[True], trajs[False])
