@@ -34,6 +34,17 @@ def rows_to_records(rows):
     return records
 
 
+def stamp_records(records):
+    """Stamp every bench record with the run manifest (git sha + schema
+    version) so a perf trajectory is attributable to the commit and JSONL
+    schema that produced it. Validated by ``repro.obs.sink --check-bench``."""
+    from repro.obs.sink import current_manifest
+    brief = current_manifest().brief()
+    for rec in records:
+        rec["manifest"] = dict(brief)
+    return records
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -61,7 +72,7 @@ def main() -> None:
     print("\n".join(rows), flush=True)
     if args.json:
         with open(args.json, "w") as f:
-            json.dump(rows_to_records(rows[1:]), f, indent=1)
+            json.dump(stamp_records(rows_to_records(rows[1:])), f, indent=1)
         print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)

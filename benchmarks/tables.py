@@ -353,8 +353,16 @@ def bench_serve(out: List[str]):
       serve/decode/bf16-kv   same loop with the bf16 KV cache — the A/B
                              for hbm_per_slot_MiB (int8 must be strictly
                              below; pinned by tests/test_serve.py)
-      serve/prefill/b{N}     bucketed AOT prefill wall time per bucket
-                             actually exercised by the request mix
+      serve/prefill/b{N}     bucketed AOT prefill latency per bucket
+                             actually exercised by the request mix —
+                             us_per_call is the histogram p50 over every
+                             call (count/p95 in derived), not the last call
+      serve/requests/int8-kv per-request lifecycle percentiles from a
+                             scheduler run under the live telemetry sink:
+                             us_per_call is TTFT p50, derived carries TTFT
+                             p95 + queue-wait p50/p95 — read back from the
+                             ``kind="request"`` JSONL events, exactly what
+                             a production sink would aggregate
 
     derived columns:
       tokens_per_s      slots x steps / wall — sustained full-occupancy
@@ -368,7 +376,10 @@ def bench_serve(out: List[str]):
     """
     import numpy as np
 
-    from repro.serve import KVQuantUnsupported
+    from repro.obs.serve_metrics import percentiles_from_events
+    from repro.obs.sink import ListSink
+    from repro.obs.telemetry import TELEMETRY
+    from repro.serve import KVQuantUnsupported, Request, Scheduler
     from repro.serve.engine import EngineConfig, ServeEngine
 
     model, params = common.get_trained_lm()
@@ -412,10 +423,42 @@ def bench_serve(out: List[str]):
             f"hbm_per_slot_MiB={st['hbm_per_slot_MiB']:.4f};"
             f"compile_count={st['compile_count']};slots={slots}"))
         if kv_quant:
-            for b, pus in sorted(st["prefill_us"].items()):
+            for b, s in sorted(st["prefill_us"].items()):
                 out.append(common.row(
-                    f"serve/prefill/b{b}", pus,
-                    f"bucket={b};group={eng.cfg.prefill_group}"))
+                    f"serve/prefill/b{b}", s["p50"],
+                    f"bucket={b};group={eng.cfg.prefill_group};"
+                    f"count={s['count']:.0f};p95={s['p95']:.1f}"))
+            # per-request TTFT / queue-wait percentiles: drain the direct
+            # admits, then drive a scheduler run (more requests than slots,
+            # so queue wait is non-trivial) under a live telemetry sink and
+            # fold the kind="request" JSONL events back into percentiles
+            while eng.active:
+                eng.step()
+            eng.drain_finished()
+            n_req = 10
+            sink = ListSink()
+            with TELEMETRY.enabled_scope(sink=sink):
+                with Scheduler(eng) as sched:
+                    sched.run([
+                        Request(rid=1000 + i,
+                                tokens=rng.integers(
+                                    0, common.BENCH_CFG.vocab,
+                                    size=lens[i % len(lens)],
+                                    ).astype(np.int32),
+                                max_new=8)
+                        for i in range(n_req)])
+                    detok_errors = sched.metrics.detok_errors
+            ttft = percentiles_from_events(sink.records, "request",
+                                           "ttft_us")
+            qw = percentiles_from_events(sink.records, "request",
+                                         "queue_wait_us")
+            out.append(common.row(
+                f"serve/requests/{tag}", ttft["p50"],
+                f"requests={n_req};slots={slots};"
+                f"ttft_p95={ttft['p95']:.1f};"
+                f"queue_wait_p50={qw['p50']:.1f};"
+                f"queue_wait_p95={qw['p95']:.1f};"
+                f"detok_errors={detok_errors}"))
 
 
 def bench_alloc(out: List[str]):

@@ -11,7 +11,6 @@ paper's kind is PTQ-for-deployment, so serving is the dictated scenario).
 """
 import argparse
 import sys
-import time
 
 import os
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
@@ -22,6 +21,7 @@ import jax.numpy as jnp
 from benchmarks import common
 from repro.core import QuantRecipe
 from repro.core.context import QuantCtx
+from repro.obs.telemetry import Stopwatch
 
 
 class ServingEngine:
@@ -81,10 +81,9 @@ def main():
     for tag, p in variants.items():
         eng = ServingEngine(model, p, backend=args.backend)
         out = eng.generate(prompts, 4)  # warm compile
-        t0 = time.perf_counter()
+        sw = Stopwatch()
         out = eng.generate(prompts, args.tokens)
-        dt = time.perf_counter() - t0
-        tps = args.batch * args.tokens / dt
+        tps = args.batch * args.tokens / sw.elapsed_s()
         if ref is None:
             ref = out
         agree = float(jnp.mean(out == ref))

@@ -38,7 +38,6 @@ depth i is paid by every later block. The solver multiplies scores by it.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -49,6 +48,7 @@ from repro.core import reconstruct as rec
 from repro.core import rtn
 from repro.core.context import QuantCtx
 from repro.core.quant_config import QuantConfig, QuantRecipe
+from repro.obs.telemetry import TELEMETRY, Stopwatch
 
 DEFAULT_BITS = (2, 3, 4, 8)
 
@@ -189,7 +189,7 @@ def probe_blocks(blocks: Sequence[rec.BlockHandle], recipe: QuantRecipe,
     over the global batch, so it psums automatically under jit).
     """
     stats0 = dataclasses.replace(rec.engine_stats())
-    t0 = time.time()
+    sw = Stopwatch()
     steps = 0
     scores: Dict[str, Dict[int, SiteScore]] = {}
     probe_cache: Dict[Any, Any] = {}
@@ -202,7 +202,9 @@ def probe_blocks(blocks: Sequence[rec.BlockHandle], recipe: QuantRecipe,
         x = x0
         for bi, block in enumerate(blocks):
             cascade = float(len(blocks) - bi)
-            y_fp = rec.probe_teacher(block, recipe, mesh)(block.params, x)
+            with TELEMETRY.span("alloc.teacher", block=block.name) as tsp:
+                y_fp = rec.probe_teacher(block, recipe, mesh)(block.params, x)
+                tsp.block_on(y_fp)
             plans = rec.site_plans(block, recipe)
             canon = rec._canon_names(block)
 
@@ -239,8 +241,11 @@ def probe_blocks(blocks: Sequence[rec.BlockHandle], recipe: QuantRecipe,
                 for rn, site in block.sites.items():
                     gates = {c: jnp.asarray(c == canon[rn])
                              for c in canon.values()}
-                    mse = float(probe_fn(block.params, x, y_fp, wstates,
-                                         gates))
+                    # float() syncs, so the probe span needs no block_on
+                    with TELEMETRY.span("alloc.probe", block=block.name,
+                                        site=rn, bits=b):
+                        mse = float(probe_fn(block.params, x, y_fp, wstates,
+                                             gates))
                     steps += 1
                     w, st, dw = deltas[rn]
                     scores.setdefault(rn, {})[b] = SiteScore(
@@ -254,4 +259,4 @@ def probe_blocks(blocks: Sequence[rec.BlockHandle], recipe: QuantRecipe,
     compiles = ((st1.probe_compiles - stats0.probe_compiles) +
                 (st1.teacher_compiles - stats0.teacher_compiles))
     return ProbeResult(scores=scores, steps=steps,
-                       seconds=time.time() - t0, compile_count=compiles)
+                       seconds=sw.elapsed_s(), compile_count=compiles)

@@ -14,6 +14,10 @@ AST layer (QL1xx, analysis/ast_rules.py):
   QL104 interpret-default-true    interpret=True as a kernel default
   QL105 pallas-missing-divis      pallas_call without a grid-divisibility
                                   guard (pad helper or assert on %)
+  QL106 adhoc-host-clock          bare time.time/perf_counter/monotonic in
+                                  host code outside repro/obs/ and
+                                  benchmarks/ — route timing through
+                                  repro.obs (Stopwatch/now()/spans)
 
 jaxpr layer (QL2xx, analysis/jaxpr_checks.py):
   QL201 unused-input              pytree leaf passed in but dead in the jaxpr

@@ -29,6 +29,14 @@ what actually got traced):
                                no visible grid-divisibility guard (no pad
                                helper and no ``assert ... % ...``) — Pallas
                                silently miscomputes on ragged tiles.
+  QL106 adhoc-host-clock       bare ``time.time``/``time.perf_counter``/
+                               ``time.monotonic`` in host code outside
+                               ``repro/obs/`` and ``benchmarks/`` — ad-hoc
+                               timing bypasses the telemetry layer; use
+                               ``repro.obs.telemetry.Stopwatch``/``now()``
+                               or a span so measurements land in the sink.
+                               Clocks *inside* traced scopes are QL103's
+                               domain and are not double-flagged here.
 
 Traced scopes are detected structurally: functions decorated with
 ``jax.jit``/``functools.partial(jax.jit, ...)``, functions passed (by name
@@ -56,6 +64,12 @@ TRACE_INDUCERS = {
 }
 # Attribute roots that mark a value as tracer-producing for QL102.
 _JAX_ROOTS = {"jnp", "jax", "lax", "pl"}
+
+# Host clock chains QL106 polices outside repro/obs/ and benchmarks/
+# (dotted form; QL103 owns these inside traced scopes).
+_HOST_CLOCKS = {"time.time", "time.perf_counter", "time.monotonic",
+                "time.process_time", "time.perf_counter_ns",
+                "time.monotonic_ns", "time.time_ns"}
 
 
 def _attr_chain(node: ast.AST) -> Optional[str]:
@@ -308,8 +322,9 @@ def lint_source(src: str, path: str = "<string>") -> Report:
                 "grid-divisibility guard (no pad helper, no `assert ... %`)")
 
     # ---- QL102 / QL103: inside traced scopes ----------------------------
+    scopes = _traced_scopes(tree)
     flagged: Set[tuple] = set()   # (rule, lineno): nested scopes overlap
-    for scope in _traced_scopes(tree):
+    for scope in scopes:
         tainted = _scope_tainted(scope)
         body = scope.body if isinstance(scope.body, list) else [scope.body]
         for stmt in body:
@@ -340,6 +355,26 @@ def lint_source(src: str, path: str = "<string>") -> Report:
                         sub.lineno,
                         f"{chain} inside a traced scope — evaluated once at "
                         "trace time, then frozen into the compiled program")
+
+    # ---- QL106: ad-hoc host clock outside the telemetry layer -----------
+    norm = path.replace(os.sep, "/")
+    if "repro/obs/" not in norm and "benchmarks/" not in norm \
+            and not norm.startswith("benchmarks"):
+        # lines covered by a traced scope belong to QL103, not QL106
+        traced_lines: Set[int] = set()
+        for scope in scopes:
+            end = getattr(scope, "end_lineno", None) or scope.lineno
+            traced_lines.update(range(scope.lineno, end + 1))
+        for node in ast.walk(tree):
+            chain = _attr_chain(node)
+            if (chain in _HOST_CLOCKS
+                    and node.lineno not in traced_lines
+                    and ("QL106", node.lineno) not in flagged):
+                flagged.add(("QL106", node.lineno))
+                add("QL106", "adhoc-host-clock", "error", node.lineno,
+                    f"{chain} outside repro.obs — ad-hoc timing bypasses "
+                    "telemetry; use repro.obs.telemetry.Stopwatch/now() or "
+                    "a span so the measurement lands in the sink")
     return rep
 
 

@@ -215,29 +215,14 @@ class RetraceError(AssertionError):
     """Raised by ``no_retrace`` when compile counts move past the budget."""
 
 
-_BACKEND_COMPILES = 0
-_LISTENER_INSTALLED = False
-
-
 def _install_backend_listener() -> bool:
     """Count actual XLA backend compiles process-wide (cache hits emit no
-    event), via jax.monitoring. Idempotent; returns installed-ness."""
-    global _LISTENER_INSTALLED
-    if _LISTENER_INSTALLED:
-        return True
-    try:
-        from jax import monitoring
-
-        def _on_event(event: str, duration: float, **kw):
-            global _BACKEND_COMPILES
-            if "backend_compile" in event:
-                _BACKEND_COMPILES += 1
-
-        monitoring.register_event_duration_secs_listener(_on_event)
-        _LISTENER_INSTALLED = True
-    except Exception:  # pragma: no cover - monitoring API unavailable
-        pass
-    return _LISTENER_INSTALLED
+    event). Delegates to :mod:`repro.obs.compile_events` — quantlint and
+    telemetry share one jax.monitoring subscription, so each compile is
+    also attributed to the enclosing telemetry span. Idempotent; returns
+    installed-ness."""
+    from repro.obs import compile_events
+    return compile_events.install()
 
 
 @contextlib.contextmanager
@@ -251,13 +236,14 @@ def no_retrace(budget: int = 0, xla_budget: Optional[int] = None):
     leave it None in code that runs eager jnp math with fresh shapes, since
     every new eager shape compiles too.
     """
-    _install_backend_listener()
+    from repro.obs import compile_events
+    installed = _install_backend_listener()
     s0 = dataclasses.replace(rec.engine_stats())
-    b0 = _BACKEND_COMPILES
+    b0 = compile_events.backend_compiles()
     yield
     s1 = rec.engine_stats()
     delta = s1.compile_count - s0.compile_count
-    bdelta = _BACKEND_COMPILES - b0
+    bdelta = compile_events.backend_compiles() - b0
     if delta > budget:
         raise RetraceError(
             f"engine compile count grew by {delta} (budget {budget}): "
@@ -268,7 +254,7 @@ def no_retrace(budget: int = 0, xla_budget: Optional[int] = None):
             f"recon_err +{s1.recon_error_compiles - s0.recon_error_compiles}, "
             f"probe +{s1.probe_compiles - s0.probe_compiles} "
             f"(XLA backend compiles +{bdelta})")
-    if xla_budget is not None and _LISTENER_INSTALLED and bdelta > xla_budget:
+    if xla_budget is not None and installed and bdelta > xla_budget:
         raise RetraceError(
             f"XLA backend compile count grew by {bdelta} "
             f"(budget {xla_budget}) while engine counters moved {delta}")

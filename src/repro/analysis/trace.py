@@ -33,6 +33,8 @@ from repro.core import rtn
 from repro.core.quant_config import QuantConfig, QuantRecipe
 from repro.core.reconstruct import (BlockHandle, Site, init_astates,
                                     init_wstates, site_plans)
+from repro.obs.sink import ListSink
+from repro.obs.telemetry import TELEMETRY
 from repro.optim.adam import AdamConfig, adam_init
 
 
@@ -178,15 +180,19 @@ def recon_chunk_entry(mesh=None, *, n: int = 8, bs: int = 4, iters: int = 6,
     if mesh is not None:
         from repro.launch.mesh import dp_axes
         dp = dp_axes(mesh)
-    return trace_jitted(
-        eng.run_chunk, args,
-        name="recon_chunk" + ("_sharded" if mesh is not None else ""),
-        argnames=_RUN_CHUNK_ARGS, donate_argnums=(1, 2, 3, 4),
-        # FlexRound has no step-annealed rounding regularizer (that is
-        # AdaRound's b-schedule), so the scanned step index is dead by
-        # design under this recipe
-        allow_unused=("steps",),
-        mesh=mesh, dp=dp)
+    # trace under live telemetry: the recon loop's spans are host-side
+    # only, so the jaxpr must be identical with the sink enabled — any
+    # telemetry op leaking into the trace shows up to QL201/QL202
+    with TELEMETRY.enabled_scope(sink=ListSink()):
+        return trace_jitted(
+            eng.run_chunk, args,
+            name="recon_chunk" + ("_sharded" if mesh is not None else ""),
+            argnames=_RUN_CHUNK_ARGS, donate_argnums=(1, 2, 3, 4),
+            # FlexRound has no step-annealed rounding regularizer (that is
+            # AdaRound's b-schedule), so the scanned step index is dead by
+            # design under this recipe
+            allow_unused=("steps",),
+            mesh=mesh, dp=dp)
 
 
 # ----------------------------------------------------------------- probe
@@ -391,13 +397,15 @@ def serve_prefill_entry(arch: str = "smollm-135m",
     true_len = jnp.full((G,), bucket, jnp.int32)
     slot_ids = jnp.arange(G, dtype=jnp.int32)
     max_new = jnp.full((G,), 4, jnp.int32)
-    return trace_jitted(
-        fn, (qparams, state, tokens, true_len, slot_ids, max_new),
-        name=f"serve_prefill[{cfg.name}][b{bucket}]",
-        argnames=("params", "state", "tokens", "true_len", "slot_ids",
-                  "max_new"),
-        donate_argnums=(1,), ranges=_serve_kv_ranges("state.cache"),
-        envelope="serve_kv")
+    # traced under live telemetry: serve.prefill spans are host-side only
+    with TELEMETRY.enabled_scope(sink=ListSink()):
+        return trace_jitted(
+            fn, (qparams, state, tokens, true_len, slot_ids, max_new),
+            name=f"serve_prefill[{cfg.name}][b{bucket}]",
+            argnames=("params", "state", "tokens", "true_len", "slot_ids",
+                      "max_new"),
+            donate_argnums=(1,), ranges=_serve_kv_ranges("state.cache"),
+            envelope="serve_kv")
 
 
 def serve_decode_entry(arch: str = "smollm-135m") -> TracedEntry:
@@ -413,12 +421,14 @@ def serve_decode_entry(arch: str = "smollm-135m") -> TracedEntry:
     state = seng.init_state(model, ecfg)
     meta = {k: state[k] for k in ("tokens", "pos", "remaining")}
     fn = jax.jit(seng.make_decode(model, ctx, ecfg), donate_argnums=(1,))
-    return trace_jitted(
-        fn, (qparams, state["cache"], meta),
-        name=f"serve_decode[{cfg.name}]",
-        argnames=("params", "cache", "meta"),
-        donate_argnums=(1,), ranges=_serve_kv_ranges("cache"),
-        envelope="serve_kv")
+    # traced under live telemetry: serve.decode_step spans are host-side only
+    with TELEMETRY.enabled_scope(sink=ListSink()):
+        return trace_jitted(
+            fn, (qparams, state["cache"], meta),
+            name=f"serve_decode[{cfg.name}]",
+            argnames=("params", "cache", "meta"),
+            donate_argnums=(1,), ranges=_serve_kv_ranges("cache"),
+            envelope="serve_kv")
 
 
 # ------------------------------------------------- quantcheck (QL3xx) entries

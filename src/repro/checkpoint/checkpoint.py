@@ -189,6 +189,7 @@ class PTQCheckpointer:
             "x_fp": x_fp,
             "x_q": x_q,
         }
+        from repro.obs.sink import current_manifest
         meta = {
             "next_block": next_block,
             # BlockReport.to_json keeps the loss/mse trajectories (JSON-safe
@@ -197,6 +198,8 @@ class PTQCheckpointer:
             "plans": plans or [],
             "engine": engine,
             "allocation": allocation,
+            # provenance: which code/runtime produced this partial state
+            "manifest": current_manifest().to_dict(),
         }
         save_pytree(self.path, tree, meta)
 

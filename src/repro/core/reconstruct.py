@@ -68,7 +68,6 @@ import collections
 import contextlib
 import dataclasses
 import functools
-import time
 import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -80,6 +79,8 @@ from repro.core import lsq
 from repro.core import paths as pth
 from repro.core.context import QuantCtx
 from repro.core.quant_config import QuantRecipe, SitePlan
+from repro.obs import profiler
+from repro.obs.telemetry import TELEMETRY, Stopwatch
 from repro.optim.adam import AdamConfig, adam_init, adam_update
 
 DEFAULT_CHUNK = 100  # scan steps fused into one jitted dispatch
@@ -591,21 +592,30 @@ def _run_scan(block: BlockHandle, recipe: QuantRecipe,
     err0 = float(eng.recon_err(block.params, c_w, c_a, x_q, y_fp))
 
     chunk = max(1, min(chunk, recipe.iters))
-    t0 = time.time()
+    sw = Stopwatch()
     losses, mses = [], []
-    it = 0
+    it, n_chunk = 0, 0
     while it < recipe.iters:
         sl = slice(it, it + min(chunk, recipe.iters - it))
-        c_w, c_a, wopt, aopt, lo, ms = eng.run_chunk(
-            block.params, c_w, c_a, wopt, aopt, x_q, y_fp,
-            None if idx is None else idx[sl], k2s[sl], steps[sl], salts,
-            sample_weight)
+        # host-side span around the compiled dispatch: the traced run_chunk
+        # jaxpr is identical with telemetry on or off (tier-1 pins zero
+        # added compiles). sync= folds device completion into the span so
+        # per-chunk time is honest, matching the block_until_ready below.
+        with TELEMETRY.span("recon.chunk", block=block.name, start=it,
+                            steps=sl.stop - it) as sp, \
+                profiler.annotate("recon.chunk", n_chunk):
+            c_w, c_a, wopt, aopt, lo, ms = eng.run_chunk(
+                block.params, c_w, c_a, wopt, aopt, x_q, y_fp,
+                None if idx is None else idx[sl], k2s[sl], steps[sl], salts,
+                sample_weight)
+            sp.block_on(ms)
         losses.append(lo)
         mses.append(ms)
         it = sl.stop
+        n_chunk += 1
     if mses:
         jax.block_until_ready(mses[-1])
-    loop_s = time.time() - t0
+    loop_s = sw.elapsed_s()
 
     err1 = float(eng.recon_err(block.params, c_w, c_a, x_q, y_fp))
     w_out = {inv[c]: v for c, v in c_w.items()}
@@ -639,17 +649,19 @@ def reconstruct_block(block: BlockHandle, recipe: QuantRecipe, x_q: jax.Array,
     weighted global-batch mean; None keeps the plain mean bit-identical to
     the recorded trajectories.
     """
-    t0 = time.time()
-    plans = site_plans(block, recipe)
-    wstates = init_wstates(block, recipe)
-    astates = astates if astates is not None else init_astates(block, recipe, x_q)
+    sw = Stopwatch()
+    with TELEMETRY.span("recon.block", block=block.name, iters=recipe.iters):
+        plans = site_plans(block, recipe)
+        wstates = init_wstates(block, recipe)
+        astates = astates if astates is not None else init_astates(
+            block, recipe, x_q)
 
-    wstates, astates, err0, err1, loop_s, loss_curve, mse_curve = _run_scan(
-        block, recipe, plans, wstates, astates, x_q, y_fp, key, chunk,
-        mesh, sample_weight)
+        wstates, astates, err0, err1, loop_s, loss_curve, mse_curve = \
+            _run_scan(block, recipe, plans, wstates, astates, x_q, y_fp,
+                      key, chunk, mesh, sample_weight)
 
     return wstates, astates, BlockReport(
-        block.name, err0, err1, recipe.iters, time.time() - t0,
+        block.name, err0, err1, recipe.iters, sw.elapsed_s(),
         steps_per_s=recipe.iters / max(loop_s, 1e-9),
         loss_curve=loss_curve, mse_curve=mse_curve)
 

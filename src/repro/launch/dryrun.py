@@ -18,12 +18,12 @@ collective-byte summary parsed from the compiled HLO.
 """
 import argparse  # noqa: E402
 import json  # noqa: E402
-import time  # noqa: E402
 import traceback  # noqa: E402
 
 import jax  # noqa: E402
 
 from repro.configs import ARCH_IDS, SHAPE_IDS, cell_applicable, get_config, get_shape  # noqa: E402
+from repro.obs.telemetry import Stopwatch  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.steps import build_cell  # noqa: E402
 from repro.roofline.analysis import analyze_compiled  # noqa: E402
@@ -41,7 +41,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         f"|{tag}" if tag else "")
     if not ok:
         return {"cell": cell_id, "status": "skipped", "reason": why}
-    t0 = time.time()
+    sw = Stopwatch()
     try:
         from repro.models.common import ambient_mesh
         mesh = make_production_mesh(multi_pod=multi_pod)
@@ -59,7 +59,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         result = {
             "cell": cell_id,
             "status": "ok",
-            "compile_s": round(time.time() - t0, 1),
+            "compile_s": round(sw.elapsed_s(), 1),
             "memory": {
                 "argument_bytes": mem.argument_size_in_bytes,
                 "output_bytes": mem.output_size_in_bytes,
@@ -86,7 +86,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             print(f"[ERR] {cell_id}: {e}", flush=True)
             traceback.print_exc()
         return {"cell": cell_id, "status": "error", "error": str(e),
-                "compile_s": round(time.time() - t0, 1)}
+                "compile_s": round(sw.elapsed_s(), 1)}
 
 
 def main():

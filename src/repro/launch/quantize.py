@@ -40,6 +40,7 @@ different rules fails loudly (per-site plans are recorded in the checkpoint).
 from __future__ import annotations
 
 import argparse
+import os
 
 import jax
 
@@ -133,6 +134,14 @@ def main():
                          "device_count=8); production = 16x16")
     ap.add_argument("--multi-pod", action="store_true",
                     help="with --mesh: add the pod axis (pod, data, model)")
+    ap.add_argument("--telemetry", default=None, metavar="DIR",
+                    help="enable the telemetry layer (repro.obs): spans/"
+                         "counters/histograms stream to DIR/events.jsonl "
+                         "as manifest-stamped JSONL")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the run in jax.profiler.trace, emitting a "
+                         "perfetto-loadable trace dir under --telemetry DIR "
+                         "(or /tmp/repro_profile)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -158,6 +167,21 @@ def main():
         cal, sample_weight = build_sharded_calibration(src, args.calib, mesh)
     else:
         cal = CalibrationSet.build(src, args.calib)
+
+    from repro.obs.sink import JsonlSink, RunManifest
+    from repro.obs.telemetry import TELEMETRY
+    if args.telemetry:
+        manifest = RunManifest.collect(backend=args.backend, mesh=args.mesh,
+                                       recipe=recipe)
+        events = os.path.join(args.telemetry, "events.jsonl")
+        TELEMETRY.enable(sink=JsonlSink(events), manifest=manifest)
+        print(f"telemetry: streaming to {events} "
+              f"(git {manifest.git_sha}, schema {manifest.schema_version})")
+    if args.profile:
+        from repro.obs import profiler
+        profiler.start(os.path.join(args.telemetry or "/tmp/repro_profile",
+                                    "profile"))
+
     x0, blocks, assemble = model.quant_blocks(params, cal.tokens)
 
     reset_engine_stats()
@@ -167,6 +191,10 @@ def main():
             blocks, recipe, x0, value=args.auto_bits, budget=args.budget,
             objective=args.alloc_objective, resume_dir=args.resume_dir,
             mesh=mesh)
+        if alloc_meta:
+            TELEMETRY.emit({"kind": "allocation",
+                            "digest": str(alloc_meta.get("digest", "")),
+                            "name": alloc_meta.get("name")})
 
     if recipe.rules:
         overridden = [(n, p.summary()) for b in blocks
@@ -198,6 +226,7 @@ def main():
           f"probe={stats.probe_compiles} "
           f"(total {stats.compile_count})", flush=True)
 
+    from repro.obs.sink import current_manifest
     out = args.out or f"/tmp/quantized_{cfg.name}_{args.method}"
     save_pytree(out, {"params": qparams, "astates": astates},
                 {"arch": cfg.name, "method": args.method,
@@ -205,7 +234,8 @@ def main():
                  # canonical --rule form so the metadata round-trips
                  "rules": [r.pattern + ":" + ",".join(
                      f"{k}={v}" for k, v in r.overrides)
-                     for r in recipe.rules]})
+                     for r in recipe.rules],
+                 "manifest": current_manifest().to_dict()})
     tot0 = sum(r.err_before for r in reports)
     tot1 = sum(r.err_after for r in reports)
     print(f"quantized {len(blocks)} blocks: recon err {tot0:.3e} -> "
@@ -221,6 +251,14 @@ def main():
                          requests=args.serve_requests,
                          max_new=args.serve_max_new,
                          kv_quant=not args.no_kv_quant)
+
+    if args.profile:
+        from repro.obs import profiler
+        profiler.stop()
+    if TELEMETRY.enabled:
+        # final aggregate record, then flush/close the sink
+        TELEMETRY.emit({"kind": "snapshot", **TELEMETRY.snapshot()})
+        TELEMETRY.disable()
 
     if args.analyze:
         from repro.analysis.lint import run_analysis
@@ -320,8 +358,6 @@ def serve_smoke(model, qparams, astates, recipe, cfg, *, backend: str = "auto",
     quantized weights dispatched through ``kernels/ops.qtensor_matmul`` under
     the requested backend. Returns us/step (also printed, with the effective
     weight bytes each step moves)."""
-    import time
-
     import jax.numpy as jnp
 
     from repro.core.context import QuantCtx
@@ -341,15 +377,17 @@ def serve_smoke(model, qparams, astates, recipe, cfg, *, backend: str = "auto",
     cache = model.init_cache(batch, prompt_len + steps + 1)
     prefill = jax.jit(lambda p, t, c: model.prefill(p, t, c, ctx))
     step = jax.jit(lambda p, t, c, pos: model.decode_step(p, t, c, pos, ctx))
+    from repro.obs.telemetry import Stopwatch
+
     _, cache = prefill(qparams, tokens, cache)
     tok = tokens[:, -1:]
     logits, cache = step(qparams, tok, cache, jnp.int32(prompt_len))  # warm
-    t0 = time.perf_counter()
+    sw = Stopwatch()
     for i in range(steps):
         logits, cache = step(qparams, tok, cache,
                              jnp.int32(prompt_len + 1 + i))
     jax.block_until_ready(logits)
-    us = (time.perf_counter() - t0) / steps * 1e6
+    us = sw.elapsed_us() / steps
     wbytes = tree_weight_bytes(qparams)
     print(f"serve-smoke[{backend}]: {us:.1f} us/step, "
           f"weight bytes/step {wbytes / 2**20:.2f} MiB")
@@ -364,14 +402,15 @@ def serve_engine_run(model, qparams, astates, recipe, cfg, *,
 
     Deploy-mode weights (kernel dispatch per ``backend``), bucketed AOT
     prefill, slot decode with the int8 KV cache by default. Prints sustained
-    tokens/s at full occupancy, HBM per slot, per-bucket prefill times, and
-    the (flat) compile count. Degrades with a machine-readable skip reason
-    on families the slot layout cannot serve."""
-    import time
-
+    tokens/s at full occupancy, HBM per slot, per-bucket prefill latency
+    (p50 over the run, not just the last call), per-request TTFT/queue-wait
+    percentiles, and the (flat) compile count. Degrades with a
+    machine-readable skip reason on families the slot layout cannot
+    serve."""
     import numpy as np
 
     from repro.core.context import QuantCtx
+    from repro.obs.telemetry import Stopwatch
     from repro.serve import EngineConfig, Request, Scheduler, ServeEngine
     from repro.serve.smoke import serve_capability
 
@@ -392,19 +431,26 @@ def serve_engine_run(model, qparams, astates, recipe, cfg, *,
                                         ).astype(np.int32),
                     max_new=max_new)
             for i in range(requests)]
-    t0 = time.perf_counter()
+    sw = Stopwatch()
     with Scheduler(engine) as sched:
         outs = sched.run(reqs)
-    dt = time.perf_counter() - t0
-    st = engine.stats()
+        st = sched.stats()
+    dt = sw.elapsed_s()
     n_tok = sum(len(v) for v in outs.values())
-    pf = " ".join(f"b{b}={us:.0f}us" for b, us in sorted(st["prefill_us"].items()))
+    pf = " ".join(f"b{b}={s['p50']:.0f}us(n={s['count']})"
+                  for b, s in sorted(st["prefill_us"].items()))
+    rq = st["requests"]
     print(f"serve[{backend}] kv={'int8' if kv_quant else 'fp'}: "
           f"{requests} requests x {max_new} tokens on {slots} slots -> "
           f"{n_tok / dt:.1f} tokens/s, "
           f"hbm_per_slot {st['hbm_per_slot_MiB']:.4f} MiB, "
           f"compile_count {st['compile_count']} "
           f"(buckets {st['buckets']}), prefill {pf}")
+    print(f"serve requests: ttft p50={rq['ttft_us']['p50']:.0f}us "
+          f"p95={rq['ttft_us']['p95']:.0f}us, "
+          f"queue_wait p50={rq['queue_wait_us']['p50']:.0f}us "
+          f"p95={rq['queue_wait_us']['p95']:.0f}us, "
+          f"detok_errors={rq['detok_errors']}")
     return st
 
 

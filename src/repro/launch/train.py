@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import argparse
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +24,7 @@ from repro.data import SyntheticTokens
 from repro.launch import sharding as shd
 from repro.launch.steps import TRAIN_OPT, make_train_step
 from repro.models import build_model
+from repro.obs.telemetry import Stopwatch
 from repro.optim.adam import adam_init
 
 
@@ -64,7 +64,7 @@ def main():
 
     step_fn = jax.jit(make_train_step(model, cfg, opt_cfg),
                       donate_argnums=(0,))
-    t0 = time.time()
+    sw = Stopwatch()
     for step in range(start, args.steps):
         batch = dict(src.batch(step, B))
         if cfg.family == "encdec":
@@ -77,7 +77,7 @@ def main():
         state, metrics = step_fn(state, batch)
         if step % 10 == 0 or step == args.steps - 1:
             print(f"step {step:5d}  loss {float(metrics['loss']):.4f}  "
-                  f"({(time.time()-t0):.1f}s)", flush=True)
+                  f"({sw.elapsed_s():.1f}s)", flush=True)
         if (step + 1) % args.ckpt_every == 0:
             mgr.save(step + 1, state)
     mgr.save(args.steps, state)

@@ -1,0 +1,83 @@
+"""Unified XLA compile accounting: one ``jax.monitoring`` subscription.
+
+Before this module there were two disjoint compile ledgers: the engine's
+trace-time counters (``core.reconstruct.engine_stats()``) and quantlint's
+private backend-compile listener (``analysis.jaxpr_checks``). Both now read
+from here: a single idempotent ``jax.monitoring`` subscription counts every
+actual XLA backend compilation (cache hits emit no event) and attributes it
+to the innermost open telemetry span — so a retrace shows up as *where*
+("serve.prefill", "recon.chunk"), not just *how many*.
+
+``no_retrace(..., xla_budget=)`` consumes :func:`backend_compiles`;
+``compile_summary()`` merges both ledgers for launch-time reporting. When
+the telemetry sink is enabled each compile also lands as a
+``kind="compile"`` JSONL event with its attributed span and duration.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict
+
+from repro.obs.telemetry import TELEMETRY
+
+UNATTRIBUTED = "<unattributed>"
+
+_LOCK = threading.Lock()
+_INSTALLED = False
+_BACKEND_COMPILES = 0
+_BY_SPAN: Dict[str, int] = {}
+
+
+def _on_event(event: str, duration: float, **kw) -> None:
+    global _BACKEND_COMPILES
+    if "backend_compile" not in event:
+        return
+    span = TELEMETRY.current_span() or UNATTRIBUTED
+    with _LOCK:
+        _BACKEND_COMPILES += 1
+        _BY_SPAN[span] = _BY_SPAN.get(span, 0) + 1
+    if TELEMETRY.enabled:
+        TELEMETRY.counter("xla.backend_compiles").inc()
+        TELEMETRY.emit({"kind": "compile", "span": span,
+                        "dur_s": round(duration, 6)})
+
+
+def install() -> bool:
+    """Register the process-wide listener (idempotent); returns whether the
+    monitoring API is available and the listener is live."""
+    global _INSTALLED
+    if _INSTALLED:
+        return True
+    try:
+        from jax import monitoring
+        monitoring.register_event_duration_secs_listener(_on_event)
+        _INSTALLED = True
+    except Exception:  # pragma: no cover - monitoring API unavailable
+        pass
+    return _INSTALLED
+
+
+def backend_compiles() -> int:
+    """Raw XLA backend compilations seen since the listener was installed."""
+    return _BACKEND_COMPILES
+
+
+def compiles_by_span() -> Dict[str, int]:
+    """Backend compiles keyed by the telemetry span open when they ran."""
+    with _LOCK:
+        return dict(_BY_SPAN)
+
+
+def compile_summary() -> Dict:
+    """Both ledgers in one dict: the engine's trace-time counters and the
+    backend listener's span-attributed counts."""
+    import dataclasses
+
+    from repro.core.reconstruct import engine_stats
+    st = engine_stats()
+    return {
+        "engine": dict(dataclasses.asdict(st),
+                       compile_count=st.compile_count),
+        "xla_backend_compiles": backend_compiles(),
+        "by_span": compiles_by_span(),
+    }

@@ -34,7 +34,6 @@ device). The host side (admission queue, detokenize thread) lives in
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -42,6 +41,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import profiler
+from repro.obs.serve_metrics import ServeMetrics
+from repro.obs.sink import current_manifest
+from repro.obs.telemetry import TELEMETRY, Stopwatch
 from repro.serve import kv as skv
 from repro.serve.smoke import serve_capability
 
@@ -174,7 +177,10 @@ class ServeEngine:
         self.ctx = ctx
         self.buckets = self.cfg.buckets()
         self.compile_count = 0
-        self.prefill_us: Dict[int, float] = {}
+        # per-bucket prefill latency histograms + request lifecycle metrics
+        # (host-side, always on; the old prefill_us[bucket] scalar overwrote,
+        # so only the last call per bucket survived)
+        self.metrics = ServeMetrics()
         self.decode_steps = 0
         self.tokens_emitted = 0
         self.slots: List[SlotView] = [SlotView()
@@ -196,22 +202,24 @@ class ServeEngine:
 
         self._prefill_exec = {}
         self.compile_us: Dict[str, float] = {}
-        for b in self.buckets:
-            t0 = time.perf_counter()
-            self._prefill_exec[b] = (
-                jax.jit(make_prefill(model, ctx, c, b), donate_argnums=(1,))
-                .lower(p_s, st_s, i32(G, b), i32(G), i32(G), i32(G))
-                .compile())
+        with TELEMETRY.span("serve.build", buckets=len(self.buckets)):
+            for b in self.buckets:
+                sw = Stopwatch()
+                self._prefill_exec[b] = (
+                    jax.jit(make_prefill(model, ctx, c, b),
+                            donate_argnums=(1,))
+                    .lower(p_s, st_s, i32(G, b), i32(G), i32(G), i32(G))
+                    .compile())
+                self.compile_count += 1
+                self.compile_us[f"prefill_b{b}"] = sw.elapsed_us()
+            cache_s = sds(self.state["cache"])
+            meta_s = sds({k: self.state[k]
+                          for k in ("tokens", "pos", "remaining")})
+            sw = Stopwatch()
+            self._decode_exec = (jax.jit(decode, donate_argnums=(1,))
+                                 .lower(p_s, cache_s, meta_s).compile())
             self.compile_count += 1
-            self.compile_us[f"prefill_b{b}"] = (time.perf_counter() - t0) * 1e6
-        cache_s = sds(self.state["cache"])
-        meta_s = sds({k: self.state[k]
-                      for k in ("tokens", "pos", "remaining")})
-        t0 = time.perf_counter()
-        self._decode_exec = (jax.jit(decode, donate_argnums=(1,))
-                             .lower(p_s, cache_s, meta_s).compile())
-        self.compile_count += 1
-        self.compile_us["decode"] = (time.perf_counter() - t0) * 1e6
+            self.compile_us["decode"] = sw.elapsed_us()
 
     # ------------------------------------------------------------ serving
     def free_slots(self) -> List[int]:
@@ -255,11 +263,13 @@ class ServeEngine:
             true_len[row] = n
             slot_ids[row] = free[row]
             max_new[row] = max(mn, 1)
-        t0 = time.perf_counter()
-        self.state, first = self._prefill_exec[bucket](
-            self.params, self.state, tokens, true_len, slot_ids, max_new)
-        first = np.asarray(first)
-        self.prefill_us[bucket] = (time.perf_counter() - t0) * 1e6
+        sw = Stopwatch()
+        with TELEMETRY.span("serve.prefill", bucket=bucket,
+                            group=len(requests)):
+            self.state, first = self._prefill_exec[bucket](
+                self.params, self.state, tokens, true_len, slot_ids, max_new)
+            first = np.asarray(first)  # host sync: first tokens are needed
+        self.metrics.observe_prefill(bucket, sw.elapsed_us())
         out = []
         for row, (rid, _, _) in enumerate(requests):
             s = self.slots[slot_ids[row]]
@@ -270,17 +280,23 @@ class ServeEngine:
             out.append((rid, tok))
             if s.remaining == 0:  # max_new=1: the prefill token was it
                 self._finished.append((rid, s.emitted))
+                self.metrics.on_finished(rid)
                 self.slots[slot_ids[row]] = SlotView()
+        self.metrics.set_occupancy(self.active)
         return out
 
     def step(self) -> List[Tuple[int, int]]:
         """One decode step across all slots; returns (rid, token) pairs for
         slots that were active. Frees slots whose budget is exhausted."""
         meta = {k: self.state[k] for k in ("tokens", "pos", "remaining")}
-        cache, meta, emitted = self._decode_exec(
-            self.params, self.state["cache"], meta)
-        self.state = {"cache": cache, **meta}
-        emitted = np.asarray(emitted)
+        sw = Stopwatch()
+        with TELEMETRY.span("serve.decode_step", active=self.active), \
+                profiler.annotate("serve.decode_step", self.decode_steps):
+            cache, meta, emitted = self._decode_exec(
+                self.params, self.state["cache"], meta)
+            self.state = {"cache": cache, **meta}
+            emitted = np.asarray(emitted)  # host sync: tokens are consumed
+        step_us = sw.elapsed_us()
         self.decode_steps += 1
         out = []
         for i, s in enumerate(self.slots):
@@ -293,7 +309,10 @@ class ServeEngine:
             out.append((s.rid, tok))
             if s.remaining <= 0:
                 self._finished.append((s.rid, s.emitted))
+                self.metrics.on_finished(s.rid)
                 self.slots[i] = SlotView()
+        self.metrics.observe_decode(step_us, len(out))
+        self.metrics.set_occupancy(self.active)
         return out
 
     @property
@@ -309,12 +328,20 @@ class ServeEngine:
         return skv.hbm_per_slot_mib(self.state["cache"], self.cfg.slots)
 
     def stats(self) -> Dict[str, Any]:
+        """Drain point for the engine's metrics. ``prefill_us`` is a
+        per-bucket histogram summary ({count, mean, p50, p95, max} —
+        every admit counts, not just the last one per bucket);
+        ``requests`` carries the per-request lifecycle summaries (queue
+        wait / TTFT / decode-step percentiles, occupancy, backlog,
+        detok_errors); ``manifest`` stamps the run identity."""
         return {
             "compile_count": self.compile_count,
             "buckets": list(self.buckets),
-            "prefill_us": dict(self.prefill_us),
+            "prefill_us": self.metrics.prefill_summary(),
             "decode_steps": self.decode_steps,
             "tokens_emitted": self.tokens_emitted,
             "hbm_per_slot_MiB": self.hbm_per_slot_mib(),
             "kv_quant": self.cfg.kv_quant,
+            "requests": self.metrics.request_summary(),
+            "manifest": current_manifest().brief(),
         }

@@ -14,7 +14,16 @@ host, so everything host-flavored lives here:
   ``queue.Queue`` drained by a daemon thread that runs the (potentially
   slow, pure-Python) ``detokenize`` callback; the decode loop only ever
   pays a lock-free put. Ordering per request id is preserved (single
-  consumer thread).
+  consumer thread). A raising callback does **not** kill the drain loop:
+  the first exception is recorded on the scheduler, counted as
+  ``detok_errors`` in telemetry, and re-raised from ``pump()``/``run()``/
+  ``close()`` — the loop keeps draining so ``queue.join()`` never hangs.
+
+* **Request lifecycle metrics** — ``submit`` stamps the enqueue time, and
+  the admitting prefill closes the queue-wait (submit → prefill start)
+  and TTFT (submit → first token, which the prefill itself emits) windows
+  on the engine's :class:`repro.obs.ServeMetrics`; backlog depth and slot
+  occupancy are mirrored as gauges. Drain via ``Scheduler.stats()``.
 
 ``run()`` drives the whole lifecycle for an offline batch; ``submit`` +
 ``pump`` expose the incremental interface for a live loop.
@@ -27,6 +36,9 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
+
+from repro.obs.serve_metrics import ServeMetrics
+from repro.obs.telemetry import TELEMETRY, now
 
 
 @dataclass
@@ -44,10 +56,13 @@ class Scheduler:
     def __init__(self, engine,
                  detokenize: Optional[Callable[[int, int], None]] = None):
         self.engine = engine
+        self.metrics: ServeMetrics = (getattr(engine, "metrics", None)
+                                      or ServeMetrics())
         self.backlog: "queue.Queue[Request]" = queue.Queue()
         self.outputs: Dict[int, List[int]] = {}
         self._detok_fn = detokenize
         self._detok_q: "queue.Queue" = queue.Queue()
+        self._detok_exc: Optional[BaseException] = None
         self._detok_thread = threading.Thread(target=self._detok_loop,
                                               daemon=True)
         self._detok_thread.start()
@@ -63,9 +78,24 @@ class Scheduler:
                 rid, tok = item
                 self.outputs.setdefault(rid, []).append(tok)
                 if self._detok_fn is not None:
-                    self._detok_fn(rid, tok)
+                    try:
+                        self._detok_fn(rid, tok)
+                    except BaseException as e:  # noqa: BLE001 - user code
+                        # record + count, keep draining: a poisoned
+                        # callback must not strand queue.join() forever
+                        if self._detok_exc is None:
+                            self._detok_exc = e
+                        self.metrics.count_detok_error()
             finally:
                 self._detok_q.task_done()
+
+    def _raise_detok(self):
+        """Surface the first detokenize-callback exception on the caller's
+        thread (cleared once raised — close() after a raising run() must
+        not raise the same error twice)."""
+        if self._detok_exc is not None:
+            exc, self._detok_exc = self._detok_exc, None
+            raise exc
 
     def _emit(self, pairs):
         for rid, tok in pairs:
@@ -73,8 +103,10 @@ class Scheduler:
 
     # --------------------------------------------------------- device side
     def submit(self, req: Request):
+        self.metrics.on_submit(req.rid)
         self.backlog.put(req)
         self._pending += 1
+        self.metrics.set_backlog(self.backlog.qsize())
 
     def _admit_some(self):
         """Fill free slots from the backlog — at most one prefill call, at
@@ -87,18 +119,28 @@ class Scheduler:
             batch.append(self.backlog.get_nowait())
             room -= 1
         if batch:
-            self._emit(eng.admit([(r.rid, r.tokens, r.max_new)
-                                  for r in batch]))
+            t_admit = now()
+            pairs = eng.admit([(r.rid, r.tokens, r.max_new)
+                               for r in batch])
+            t_first = now()
+            bucket = eng.bucket_for(max(len(r.tokens) for r in batch))
+            for r in batch:
+                self.metrics.on_admitted(r.rid, bucket, t_admit, t_first)
+            self._emit(pairs)
 
     def pump(self) -> bool:
         """One scheduling round: admit, then one decode step across slots.
-        Returns False when there is nothing left to do."""
+        Returns False when there is nothing left to do. Re-raises a
+        detokenize-callback failure recorded by the drain thread."""
+        self._raise_detok()
         eng = self.engine
-        self._admit_some()
-        if eng.active:
-            self._emit(eng.step())
+        with TELEMETRY.span("serve.pump", backlog=self.backlog.qsize()):
+            self._admit_some()
+            if eng.active:
+                self._emit(eng.step())
         for _rid, _toks in eng.drain_finished():
             self._pending -= 1
+        self.metrics.set_backlog(self.backlog.qsize())
         return eng.active > 0 or not self.backlog.empty()
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
@@ -109,14 +151,29 @@ class Scheduler:
         while self._pending > 0:
             self.pump()
         self._detok_q.join()  # all handed tokens consumed by the thread
+        self._raise_detok()   # a failure in the final drain still surfaces
         return self.outputs
+
+    def stats(self) -> Dict:
+        """Engine stats + the per-request lifecycle summaries this
+        scheduler fed (queue wait / TTFT percentiles, detok_errors)."""
+        st = self.engine.stats() if hasattr(self.engine, "stats") else {}
+        st["requests"] = self.metrics.request_summary()
+        return st
 
     def close(self):
         self._detok_q.put(_STOP)
         self._detok_thread.join(timeout=5)
+        self._raise_detok()
 
     def __enter__(self):
         return self
 
     def __exit__(self, *exc):
+        # don't mask an in-flight exception with the detok re-raise
+        if exc and exc[0] is not None:
+            self._detok_q.put(_STOP)
+            self._detok_thread.join(timeout=5)
+            return False
         self.close()
+        return False

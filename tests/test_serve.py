@@ -226,3 +226,51 @@ def test_admit_rejects_oversubscription(engine, deploy_lm):
         engine.admit([(300 + i, p, 2) for i, p in enumerate(prompts)])
     with pytest.raises(ValueError, match="exceeds the largest bucket"):
         engine.bucket_for(MAX_LEN + 1)
+
+
+# ------------------------------------------------------------- observability
+def test_detok_error_counted_and_reraised(engine, deploy_lm):
+    """A raising detokenize callback must not kill the drain thread: the
+    loop keeps consuming (so ``queue.join()`` never hangs), the error is
+    counted on the scheduler's metrics, and the first exception is
+    re-raised on the caller's thread — once; ``close()`` after the raise
+    is clean."""
+    cfg = deploy_lm[0]
+    prompts = _prompts([4, 6], cfg.vocab, seed=5)
+    poisoned = []
+
+    def bad_detok(rid, tok):
+        if rid == 400 and not poisoned:
+            poisoned.append(tok)
+            raise RuntimeError("tokenizer exploded")
+
+    reqs = [Request(400 + i, p, max_new=3) for i, p in enumerate(prompts)]
+    sched = Scheduler(engine, detokenize=bad_detok)
+    try:
+        with pytest.raises(RuntimeError, match="tokenizer exploded"):
+            sched.run(reqs)
+        sched.close()  # joins the drain thread; cleared error, no re-raise
+        assert sched.metrics.detok_errors >= 1
+        assert sched.outputs[400], "drain loop died at the poisoned token"
+    finally:
+        while engine.active:  # leave the shared engine idle for later tests
+            engine.step()
+        engine.drain_finished()
+
+
+def test_prefill_latency_histogram_accumulates(engine, deploy_lm):
+    """Per-bucket prefill latency is a histogram, not a last-write scalar:
+    repeated admits into the same bucket all survive into the summary
+    (count grows; p50/p95 exposed through ``engine.stats()``)."""
+    cfg = deploy_lm[0]
+    before = engine.metrics.prefill_hist(8).count
+    for seed in (6, 7):
+        toks = _prompts([4], cfg.vocab, seed=seed)[0]
+        engine.admit([(500 + seed, toks, 2)])
+        while engine.active:
+            engine.step()
+        engine.drain_finished()
+    s = engine.stats()["prefill_us"][8]
+    assert s["count"] == before + 2, "prefill histogram overwrote a sample"
+    assert {"count", "mean", "p50", "p95", "max"} <= set(s)
+    assert 0 < s["p50"] <= s["p95"] <= s["max"]
