@@ -417,10 +417,13 @@ def bench_serve(out: List[str]):
             eng.step()
         dt = time.perf_counter() - t0
         st = eng.stats()
+        # MiB derived from the engine's byte accessor (hbm_per_slot_bytes),
+        # the same value quantlint's QL403 cross-checks statically from the
+        # decode jaxpr — the column can never drift from what the graph moves
         out.append(common.row(
             f"serve/decode/{tag}", dt / steps * 1e6,
             f"tokens_per_s={slots * steps / dt:.0f};"
-            f"hbm_per_slot_MiB={st['hbm_per_slot_MiB']:.4f};"
+            f"hbm_per_slot_MiB={st['hbm_per_slot_bytes'] / 2**20:.4f};"
             f"compile_count={st['compile_count']};slots={slots}"))
         if kv_quant:
             for b, s in sorted(st["prefill_us"].items()):

@@ -1,6 +1,6 @@
 """quantlint — jaxpr-, AST- and abstract-interpretation-level quant analysis.
 
-Three layers, one CLI (``python -m repro.analysis.lint``):
+Four layers, one CLI (``python -m repro.analysis.lint``):
 
 - AST rules (QL1xx, :mod:`repro.analysis.ast_rules`): repo conventions —
   no ad-hoc ``jax.jit``, no host casts/entropy in traced code, no
@@ -16,6 +16,12 @@ Three layers, one CLI (``python -m repro.analysis.lint``):
   layout over a shape lattice (:mod:`repro.analysis.diffcheck`), and
   shard-safety checks for lost/wrong-axis collectives
   (:mod:`repro.analysis.shardcheck`).
+- memcheck (QL4xx, :mod:`repro.analysis.memcheck`; opt-in via ``--mem``):
+  jaxpr-level liveness against per-entry HBM-budget contracts
+  (:class:`repro.analysis.trace.MemContract`) — peak-live vs budget at the
+  traced window and the production envelope, donation effectiveness,
+  weight-traffic honesty against the repo's byte accessors and live bench
+  rows, and the cache-growth (paged-KV gap) report.
 
 See ROADMAP "Static analysis" for the rule catalog and allowlist policy.
 """

@@ -30,11 +30,13 @@ jaxpr layer (QL2xx, analysis/jaxpr_checks.py):
   QL207 kernel-fallback           QTensor layout served by the dequantize
                                   fallback instead of a kernel
 
-meta (analysis/report.py):
-  QL110 stale-allowlist           an allowlist entry suppressed nothing on a
-                                  full run — the excused violation is gone;
-                                  drop the entry (full runs only: partial
-                                  layers would see false staleness)
+meta (analysis/report.py + ast_rules.py):
+  QL110 stale-allowlist /         an allowlist entry — or an inline
+        stale-inline-ignore       ``quantlint: ignore`` comment — suppressed
+                                  nothing on a full run: the excused
+                                  violation is gone; drop it (full runs
+                                  only: partial layers would see false
+                                  staleness)
 
 quantcheck layer (QL3xx, analysis/intervals.py + diffcheck.py +
 shardcheck.py — abstract-interpretation numerics verifier and cross-backend
@@ -61,6 +63,27 @@ kernel differ):
   QL306 scan-collective-          a collective inside a donated-carry scan
         unconstrained             body with no sharding constraint anchoring
                                   the reduced value's layout
+
+memcheck layer (QL4xx, analysis/memcheck.py — jaxpr liveness vs per-entry
+MemContract HBM budgets; opt-in via ``lint --mem``):
+  QL401 hbm-budget                peak-live bytes exceed the entry's declared
+                                  budget, at the traced window or scaled to
+                                  the production envelope (serve_kv seq_max);
+                                  a fitting peak is reported as a proof (info)
+  QL402 dead-donation             a donated buffer no output can actually
+                                  reuse (shape/dtype mismatch, or every
+                                  candidate's lifetime overlaps) — the
+                                  silent inverse of QL203
+  QL403 weight-traffic            the jaxpr's live bytes for a labeled group
+                                  drifted from the accessors' claim
+                                  (tree_weight_bytes / hbm_per_slot_bytes),
+                                  or from the live bench rows (--bench-rows)
+  QL404 cache-growth (info)       window state scaling with the *allocated*
+                                  max_len, not the used length — the
+                                  quantified paged-KV gap (--mem-json)
+  QL405 kv-gap-static             the int8-vs-bf16 per-token KV gap proven
+                                  (info) or refuted (error) from the two
+                                  serve_decode jaxprs alone
 """
 from __future__ import annotations
 

@@ -47,6 +47,10 @@ covers those for the entry points that matter.
 
 Inline suppression: ``# quantlint: ignore[QL102]`` on the flagged line or
 the line above (rule id optional; bare ``quantlint: ignore`` silences all).
+Full lint runs audit the suppressions themselves: an ignore comment that
+suppressed nothing errors as QL110 (stale-inline-ignore), mirroring the
+allowlist staleness audit. Detection is tokenizer-based, so docstrings
+quoting the syntax do not count as suppressions.
 """
 from __future__ import annotations
 
@@ -242,19 +246,50 @@ def _traced_scopes(tree: ast.Module) -> List[ast.AST]:
     return out
 
 
-def _suppressed(lines: List[str], lineno: int, rule: str) -> bool:
+def _ignore_comments(src: str) -> dict:
+    """``{lineno: comment text}`` for every *actual* ``# quantlint: ignore``
+    comment, via the tokenizer — docstrings and string literals that merely
+    contain the phrase (this repo documents the syntax in a few places) are
+    not suppressions and must not look like stale ones."""
+    import io
+    import tokenize
+
+    out = {}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(src).readline):
+            if (tok.type == tokenize.COMMENT
+                    and "quantlint: ignore" in tok.string):
+                out[tok.start[0]] = tok.string
+    except tokenize.TokenError:  # pragma: no cover - sources always tokenize
+        pass
+    return out
+
+
+def _suppressed(ignores: dict, lineno: int, rule: str,
+                used: Optional[Set[int]] = None) -> bool:
+    """Does an ignore comment on the flagged line (or the line above) cover
+    ``rule``? A hit is recorded in ``used`` so full runs can error on
+    comments that suppressed nothing (QL110 stale-inline-ignore)."""
     for ln in (lineno, lineno - 1):
-        if 1 <= ln <= len(lines):
-            text = lines[ln - 1]
-            if "quantlint: ignore" in text:
-                tag = text.split("quantlint: ignore", 1)[1]
-                if "[" not in tag or rule in tag:
-                    return True
+        text = ignores.get(ln)
+        if text is not None:
+            tag = text.split("quantlint: ignore", 1)[1]
+            if "[" not in tag or rule in tag:
+                if used is not None:
+                    used.add(ln)
+                return True
     return False
 
 
-def lint_source(src: str, path: str = "<string>") -> Report:
-    """Run every QL1xx rule over one module's source."""
+def lint_source(src: str, path: str = "<string>",
+                report_stale_ignores: bool = False) -> Report:
+    """Run every QL1xx rule over one module's source.
+
+    ``report_stale_ignores=True`` (full runs only — partial layers would
+    see false staleness) errors as QL110 on every inline
+    ``# quantlint: ignore`` comment that suppressed nothing: a stale ignore
+    is a standing blanket waiting to hide an unrelated future finding.
+    """
     rep = Report()
     try:
         tree = ast.parse(src, filename=path)
@@ -262,10 +297,11 @@ def lint_source(src: str, path: str = "<string>") -> Report:
         rep.add("QL100", "syntax-error", "error", f"{path}:{e.lineno or 0}",
                 str(e))
         return rep
-    lines = src.splitlines()
+    ignores = _ignore_comments(src)
+    used_ignores: Set[int] = set()
 
     def add(rule, name, sev, lineno, msg):
-        if not _suppressed(lines, lineno, rule):
+        if not _suppressed(ignores, lineno, rule, used_ignores):
             rep.add(rule, name, sev, f"{path}:{lineno}", msg)
 
     # ---- QL101: any jax.jit call site or decorator ----------------------
@@ -375,6 +411,14 @@ def lint_source(src: str, path: str = "<string>") -> Report:
                     f"{chain} outside repro.obs — ad-hoc timing bypasses "
                     "telemetry; use repro.obs.telemetry.Stopwatch/now() or "
                     "a span so the measurement lands in the sink")
+
+    # ---- QL110: inline ignore that suppressed nothing -------------------
+    if report_stale_ignores:
+        for ln in sorted(set(ignores) - used_ignores):
+            rep.add("QL110", "stale-inline-ignore", "error", f"{path}:{ln}",
+                    f"inline suppression {ignores[ln].strip()!r} matched no "
+                    "finding — the violation it excused is gone; drop the "
+                    "comment before it hides an unrelated future finding")
     return rep
 
 
@@ -384,7 +428,8 @@ def lint_file(path: str) -> Report:
     return lint_source(src, path)
 
 
-def lint_tree(root: str, rel_to: Optional[str] = None) -> Report:
+def lint_tree(root: str, rel_to: Optional[str] = None,
+              report_stale_ignores: bool = False) -> Report:
     """Lint every .py file under ``root``; finding paths are reported
     relative to ``rel_to`` (default: cwd) so allowlist globs like
     ``src/repro/kernels/*`` match regardless of where lint runs."""
@@ -397,5 +442,6 @@ def lint_tree(root: str, rel_to: Optional[str] = None) -> Report:
                 continue
             full = os.path.join(dirpath, fn)
             shown = os.path.relpath(full, rel_to)
-            rep.extend(lint_source(open(full).read(), shown))
+            rep.extend(lint_source(open(full).read(), shown,
+                                   report_stale_ignores=report_stale_ignores))
     return rep

@@ -22,15 +22,25 @@ what the analysis-verify CI job runs); ``--parity-json`` /
 artifacts. ``--decode-smoke`` additionally quantizes the smoke LM
 (export-only) and checks its deploy-mode decode jaxpr.
 
+``--mem`` adds the memcheck layer (QL4xx): jaxpr-level liveness against the
+per-entry HBM-budget contracts, donation effectiveness, weight-traffic
+honesty and the cache-growth report, over every traced entry plus the serve
+engine entries (including the bf16-KV decode variant for the static
+int8-vs-bf16 gap proof). ``--mem-json`` writes the liveness records;
+``--bench-rows`` (repeatable) cross-checks them against live
+``benchmarks.run --json`` artifacts.
+
 ``--seed-bug`` re-introduces a known regression to prove the analyzers
 still catch it; the run must then exit non-zero: ``a_state_drop`` /
 ``per_layer_retrace`` (jaxpr layer), ``int8_overflow`` / ``scale_underflow``
-/ ``lost_psum`` (quantcheck layer). Seeded runs skip the differential sweep
-(they are targeted regression checks, not parity runs).
+/ ``lost_psum`` (quantcheck layer), ``dead_donation`` / ``hbm_blowout``
+(memcheck layer; combine with ``--mem``). Seeded runs skip the differential
+sweep (they are targeted regression checks, not parity runs).
 
 Full runs (no ``--ast-only``/``--jaxpr-only``/``--seed-bug``) also audit the
-allowlist itself: an entry that suppressed nothing errors as QL110 — stale
-excuses get dropped, not accumulated.
+suppressions themselves: an allowlist entry — or an inline
+``# quantlint: ignore[QLxxx]`` comment — that suppressed nothing errors as
+QL110; stale excuses get dropped, not accumulated.
 
 Exit code: 1 if any error-severity finding survives the allowlist, else 0.
 Warnings (e.g. QL207 conv fallbacks) never fail the run; they are the
@@ -50,7 +60,7 @@ from repro.analysis.allowlist import default_allowlist
 from repro.analysis.report import Report, merge
 
 SEED_BUGS = ("a_state_drop", "per_layer_retrace", "int8_overflow",
-             "scale_underflow", "lost_psum")
+             "scale_underflow", "lost_psum", "dead_donation", "hbm_blowout")
 
 
 def repo_paths() -> Tuple[str, str]:
@@ -64,7 +74,8 @@ def repo_paths() -> Tuple[str, str]:
 
 
 def jaxpr_entries(*, seed_bug: Optional[str] = None,
-                  decode_smoke: bool = False, log=print) -> List:
+                  decode_smoke: bool = False, mem: bool = False,
+                  log=print) -> List:
     """The default traced-entry set; mesh entry included when the process
     has enough devices for the debug mesh."""
     import jax
@@ -80,24 +91,34 @@ def jaxpr_entries(*, seed_bug: Optional[str] = None,
         entries.append(trace.flexround_apply_entry(underflow=True))
     elif seed_bug == "lost_psum":
         entries.append(trace.lost_psum_entry())
+    elif seed_bug == "dead_donation":
+        entries.append(trace.dead_donation_entry())
+    elif seed_bug == "hbm_blowout":
+        entries.append(trace.hbm_blowout_entry())
     if jax.device_count() >= 8:
         from repro.launch.mesh import make_debug_mesh
         entries.append(trace.recon_chunk_entry(mesh=make_debug_mesh()))
     else:
         log("quantlint: < 8 devices — skipping the sharded recon entry "
             "(run under XLA_FLAGS=--xla_force_host_platform_device_count=8)")
-    if decode_smoke:
+    if decode_smoke or (mem and seed_bug is None):
         entries.append(trace.deploy_decode_entry())
         # the serving loop: QL201/QL203/QL207 over the engine's bucketed
         # prefill-insert and slot decode step, with the int8 KV-scale
         # range contract so QL303 proves the stored scales stay normal
         entries.append(trace.serve_prefill_entry())
         entries.append(trace.serve_decode_entry())
+    if mem and seed_bug is None:
+        # the bf16-KV decode variant exists for memcheck's static
+        # int8-vs-bf16 per-slot gap proof (QL405)
+        entries.append(trace.serve_decode_entry(kv_quant=False))
     return entries
 
 
 def run_analysis(*, ast_only: bool = False, jaxpr_only: bool = False,
                  seed_bug: Optional[str] = None, decode_smoke: bool = False,
+                 mem: bool = False, mem_json: Optional[str] = None,
+                 bench_rows: Optional[List[str]] = None,
                  use_allowlist: bool = True, diff_full: bool = False,
                  parity_json: Optional[str] = None,
                  coverage_json: Optional[str] = None, log=print) -> Report:
@@ -106,17 +127,39 @@ def run_analysis(*, ast_only: bool = False, jaxpr_only: bool = False,
     from repro.analysis.intervals import check_intervals
     from repro.analysis.shardcheck import check_shard_safety
 
+    # staleness audits (allowlist + inline ignores) are only decidable on a
+    # full run: a partial layer never produces the findings an entry or an
+    # inline ignore exists for
+    full_run = not ast_only and not jaxpr_only and seed_bug is None
     reports = []
     if not jaxpr_only:
         src, root = repo_paths()
-        reports.append(ast_rules.lint_tree(src, rel_to=root))
+        reports.append(ast_rules.lint_tree(src, rel_to=root,
+                                           report_stale_ignores=full_run))
     if not ast_only:
-        for entry in jaxpr_entries(seed_bug=seed_bug,
-                                   decode_smoke=decode_smoke, log=log):
+        mem_records = []
+        entries = jaxpr_entries(seed_bug=seed_bug, decode_smoke=decode_smoke,
+                                mem=mem, log=log)
+        for entry in entries:
             reports.append(jaxpr_checks.check_entry(entry))
             # quantcheck: interval numerics + shard safety per entry
             reports.append(check_intervals(entry))
             reports.append(check_shard_safety(entry))
+            if mem:
+                # memcheck: liveness + HBM-budget contracts per entry
+                from repro.analysis.memcheck import check_memory
+                mem_rep, mem_rec = check_memory(entry)
+                reports.append(mem_rep)
+                mem_records.append(mem_rec)
+        if mem and seed_bug is None:
+            from repro.analysis.memcheck import (check_bench_rows,
+                                                 check_kv_static_gap)
+            reports.append(check_kv_static_gap(entries))
+            if bench_rows:
+                reports.append(check_bench_rows(bench_rows, log=log))
+        if mem and mem_json:
+            from repro.analysis.memcheck import mem_report_json
+            mem_report_json(mem_records, mem_json, log=log)
         reports.append(jaxpr_checks.check_retrace(
             per_layer=(seed_bug == "per_layer_retrace")))
         from repro.analysis.coverage import coverage_table, kernel_coverage
@@ -143,9 +186,6 @@ def run_analysis(*, ast_only: bool = False, jaxpr_only: bool = False,
                 log(f"parity matrix written to {parity_json}")
     rep = merge(*reports)
     if use_allowlist:
-        # staleness is only decidable on a full run: a partial layer never
-        # produces the findings the entry exists for
-        full_run = not ast_only and not jaxpr_only and seed_bug is None
         rep = rep.apply_allowlist(default_allowlist(),
                                   report_stale=full_run)
     return rep
@@ -165,6 +205,18 @@ def main(argv=None) -> int:
     ap.add_argument("--diff-full", action="store_true",
                     help="run the full QL304 shape lattice (>= 20 shapes per "
                          "layout) instead of the 3-shape smoke subset")
+    ap.add_argument("--mem", action="store_true",
+                    help="also run memcheck (QL4xx): jaxpr liveness vs the "
+                         "per-entry HBM-budget contracts (adds the serve "
+                         "entries + the bf16-KV decode variant)")
+    ap.add_argument("--mem-json", default=None, metavar="PATH",
+                    help="write the memcheck liveness report to PATH "
+                         "(CI artifact; implies nothing without --mem)")
+    ap.add_argument("--bench-rows", action="append", default=None,
+                    metavar="PATH",
+                    help="bench --json artifact(s) to cross-check against "
+                         "the static byte accounting (QL403; repeatable; "
+                         "requires --mem and the repo root as cwd)")
     ap.add_argument("--seed-bug", choices=SEED_BUGS, default=None,
                     help="re-introduce a known regression; the run must "
                          "exit non-zero")
@@ -185,6 +237,8 @@ def main(argv=None) -> int:
     rep = run_analysis(ast_only=args.ast_only, jaxpr_only=args.jaxpr_only,
                        seed_bug=args.seed_bug,
                        decode_smoke=args.decode_smoke,
+                       mem=args.mem, mem_json=args.mem_json,
+                       bench_rows=args.bench_rows,
                        use_allowlist=not args.no_allowlist,
                        diff_full=args.diff_full,
                        parity_json=args.parity_json,

@@ -38,6 +38,39 @@ from repro.obs.telemetry import TELEMETRY
 from repro.optim.adam import AdamConfig, adam_init
 
 
+@dataclasses.dataclass(frozen=True)
+class MemContract:
+    """Per-entry HBM budget: ``budget(L) = fixed_bytes + per_len_bytes*L``.
+
+    The contract memcheck (QL401) proves the entry's jaxpr peak-live bytes
+    against — at the traced window length *and*, when ``envelope_len`` is
+    declared, scaled up to the production window (every buffer carrying a
+    ``max_len`` dim scales linearly, everything else is fixed). Liveness is
+    computed on the jaxpr, i.e. *pre-fusion*: XLA fusion only shrinks real
+    peaks, so ``jaxpr peak <= budget`` soundly implies the compiled program
+    fits. Budgets therefore carry explicit, documented headroom over their
+    semantic components (weights + window state + activation slack), and
+    the rule exists to catch asymptotic regressions — a dequantized window
+    materialized as persistent state, a doubled carry — not 5%% drifts.
+
+    ``expect`` rows feed QL403 weight-traffic honesty: ``(measure,
+    label_glob, expected_bytes)`` — the bytes the live accessors
+    (``tree_weight_bytes``, ``serve.kv.hbm_per_slot_bytes``) report for the
+    exemplar pytrees, cross-checked against the bytes the jaxpr's *live*
+    invars matching ``label_glob`` actually move.
+    """
+    fixed_bytes: int              # window-independent budget component
+    per_len_bytes: int = 0        # budget bytes per token of the window
+    max_len: int = 0              # traced [*, max_len] window (0 = none)
+    envelope_len: int = 0         # production window (envelope seq_max)
+    slots: int = 0                # decode slots (serve entries)
+    note: str = ""                # where the numbers come from
+    expect: Tuple[Tuple[str, str, int], ...] = ()
+
+    def budget_at(self, length: int) -> int:
+        return self.fixed_bytes + self.per_len_bytes * int(length)
+
+
 @dataclasses.dataclass
 class TracedEntry:
     """One traced entry point, ready for the jaxpr analyzers."""
@@ -55,6 +88,9 @@ class TracedEntry:
     # the overflow proof (kernels.envelope.SHAPE_ENVELOPES key)
     ranges: Tuple[Tuple[str, float, float], ...] = ()
     envelope: Optional[str] = None
+    # memcheck (repro.analysis.memcheck) input: the entry's HBM budget
+    # contract; None skips QL401 (the liveness report still runs)
+    mem: Optional[MemContract] = None
 
 
 def _path_str(path) -> str:
@@ -75,7 +111,8 @@ def trace_jitted(jitted, args: Tuple, *, name: str,
                  allow_unused: Tuple[str, ...] = (),
                  mesh=None, dp: Tuple[str, ...] = (),
                  ranges: Tuple[Tuple[str, float, float], ...] = (),
-                 envelope: Optional[str] = None) -> TracedEntry:
+                 envelope: Optional[str] = None,
+                 mem: Optional[MemContract] = None) -> TracedEntry:
     """Trace ``jitted(*args)`` and label its flattened invars.
 
     ``argnames`` must name each positional argument; labels come out as
@@ -104,7 +141,48 @@ def trace_jitted(jitted, args: Tuple, *, name: str,
                        donated=frozenset(donated),
                        allow_unused=tuple(allow_unused), mesh=mesh, dp=dp,
                        donated_leaves=tuple(donated_leaves),
-                       ranges=tuple(ranges), envelope=envelope)
+                       ranges=tuple(ranges), envelope=envelope, mem=mem)
+
+
+# ------------------------------------------------------ memory contracts
+def _tree_bytes(tree) -> int:
+    """Actual device bytes of a pytree's array leaves."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(tree)
+               if hasattr(leaf, "dtype"))
+
+
+def _window_bytes(tree, max_len: int) -> int:
+    """Bytes of leaves carrying a ``max_len`` dim (the sequence window)."""
+    if not max_len:
+        return 0
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(tree)
+               if hasattr(leaf, "shape") and max_len in leaf.shape)
+
+
+def mem_contract(args, *, max_len: int = 0, envelope_len: int = 0,
+                 slots: int = 0, headroom: float = 2.0,
+                 len_headroom: float = 8.0, fixed_extra: int = 1 << 20,
+                 note: str = "",
+                 expect: Tuple[Tuple[str, str, int], ...] = ()
+                 ) -> MemContract:
+    """Derive an entry's :class:`MemContract` from its exemplar arguments.
+
+    ``fixed = headroom * (non-window arg bytes) + fixed_extra`` covers the
+    arguments, their (donation-aliased) outputs and smoke-scale activation
+    temporaries; ``per_len = len_headroom * (window arg bytes) / max_len``
+    covers the window state plus the pre-fusion f32 views the decode
+    attention takes of it (jaxpr liveness counts the ``astype(f32)`` of the
+    int8 codes that XLA later fuses away — see :class:`MemContract`).
+    """
+    total = _tree_bytes(args)
+    win = _window_bytes(args, max_len)
+    per_len = int(len_headroom * win / max_len) if max_len else 0
+    return MemContract(
+        fixed_bytes=int(headroom * (total - win)) + fixed_extra,
+        per_len_bytes=per_len, max_len=max_len, envelope_len=envelope_len,
+        slots=slots, note=note, expect=tuple(expect))
 
 
 # --------------------------------------------------------------- toy blocks
@@ -192,7 +270,15 @@ def recon_chunk_entry(mesh=None, *, n: int = 8, bs: int = 4, iters: int = 6,
             # AdaRound's b-schedule), so the scanned step index is dead by
             # design under this recipe
             allow_unused=("steps",),
-            mesh=mesh, dp=dp)
+            mesh=mesh, dp=dp,
+            # HBM contract: the donated Adam/rounding carries alias their
+            # outputs in place, so the chunk's peak is args + the scanned
+            # step's gradient/activation temporaries (grads mirror the
+            # carries; 2x arg headroom covers them at any chunk length)
+            mem=mem_contract(
+                args, headroom=2.0,
+                note="donated Adam/rounding carries + calibration streams; "
+                     "grads mirror the carries (2x) + 1 MiB step slack"))
 
 
 # ----------------------------------------------------------------- probe
@@ -220,9 +306,15 @@ def probe_entry(bits: int = 4, d: int = 16, h: int = 24) -> TracedEntry:
     gates = {c: jnp.asarray(c == first) for c in canon.values()}
     x = jax.random.normal(jax.random.key(21), (4, d), jnp.float32)
     y_fp = jax.random.normal(jax.random.key(22), (4, d), jnp.float32)
-    return trace_jitted(probe_fn, (block.params, x, y_fp, wstates, gates),
+    args = (block.params, x, y_fp, wstates, gates)
+    return trace_jitted(probe_fn, args,
                         name="probe_step",
-                        argnames=("params", "x", "y_fp", "wstates", "gates"))
+                        argnames=("params", "x", "y_fp", "wstates", "gates"),
+                        mem=mem_contract(
+                            args, headroom=2.0,
+                            note="params + RTN states + probe streams; the "
+                                 "gated fake-quant materializes one "
+                                 "quantized weight per site (2x)"))
 
 
 # --------------------------------------------------------- qtensor_matmul
@@ -348,22 +440,51 @@ def deploy_decode_entry(arch: str = "smollm-135m",
     """The smoke LM's deploy-mode decode step — every QTensor
     code/scale/zero leaf and every LSQ deploy grid must stay live through
     the serving path."""
+    from repro.core.qtensor import tree_weight_bytes
+    from repro.kernels.envelope import get_envelope
+    from repro.serve import kv as skv
+
     cfg, model, qparams, ctx = _deploy_smoke_lm(arch)
     batch, prompt = 2, 8
+    max_len = prompt + 4
     tokens = jax.random.randint(jax.random.key(1), (batch, prompt), 0,
                                 cfg.vocab)
-    cache = model.init_cache(batch, prompt + 4)
+    cache = model.init_cache(batch, max_len)
     step = jax.jit(
         lambda p, t, c, pos: model.decode_step(p, t, c, pos, ctx))
     tok = tokens[:, -1:]
+    args = (qparams, tok, cache, jnp.int32(prompt))
     return trace_jitted(
-        step, (qparams, tok, cache, jnp.int32(prompt)),
+        step, args,
         name=f"deploy_decode[{cfg.name}]",
         argnames=("params", "tokens", "cache", "pos"),
-        allow_unused=allow_unused)
+        allow_unused=allow_unused,
+        mem=mem_contract(
+            args, max_len=max_len,
+            envelope_len=get_envelope("serve_kv").seq_max, slots=batch,
+            note="packed weights + [batch, max_len] fp KV window; len "
+                 "headroom covers the attention's f32 window views",
+            expect=(("weights", "params*", tree_weight_bytes(qparams)),
+                    ("kv_cache", "cache*", skv.cache_bytes(cache)))))
 
 
 # ------------------------------------------------------------ serve engine
+def _serve_smoke_config(*, kv_quant: bool = True, dtype=None):
+    """The one smoke-scale ``EngineConfig`` every serve trace entry uses.
+
+    ``max_len=24`` deliberately: memcheck classifies a buffer as
+    window-scaled when ``max_len`` appears in its shape, so the window
+    length must be unique among the smoke LM's dims (d_model=64, heads=4,
+    kv_heads=2, head_dim=16, d_ff=128, vocab=128) — 16 would make every
+    attention head-dim buffer look like KV state. Buckets stay [8, 16].
+    """
+    from repro.serve import engine as seng
+
+    kw = {} if dtype is None else {"dtype": dtype}
+    return seng.EngineConfig(slots=2, max_len=24, prefill_group=2,
+                             kv_quant=kv_quant, min_bucket=8, **kw)
+
+
 def _serve_kv_ranges(prefix: str) -> Tuple[Tuple[str, float, float], ...]:
     """Value-range contract for the slot state's int8 KV cache: stored
     scales are floored at kv_quantize's KV_SCALE_MIN (so QL303 can prove
@@ -383,11 +504,13 @@ def serve_prefill_entry(arch: str = "smollm-135m",
     the exact function ``ServeEngine`` AOT-compiles: donated slot state
     (QL203 aliasing), every KV scale live (QL201), and the int8 KV scale
     range contract (QL303)."""
+    from repro.core.qtensor import tree_weight_bytes
+    from repro.kernels.envelope import get_envelope
     from repro.serve import engine as seng
+    from repro.serve import kv as skv
 
     cfg, model, qparams, ctx = _deploy_smoke_lm(arch)
-    ecfg = seng.EngineConfig(slots=2, max_len=16, prefill_group=2,
-                             kv_quant=True, min_bucket=8)
+    ecfg = _serve_smoke_config()
     state = seng.init_state(model, ecfg)
     G = ecfg.prefill_group
     fn = jax.jit(seng.make_prefill(model, ctx, ecfg, bucket),
@@ -397,38 +520,72 @@ def serve_prefill_entry(arch: str = "smollm-135m",
     true_len = jnp.full((G,), bucket, jnp.int32)
     slot_ids = jnp.arange(G, dtype=jnp.int32)
     max_new = jnp.full((G,), 4, jnp.int32)
+    args = (qparams, state, tokens, true_len, slot_ids, max_new)
+    mem = mem_contract(
+        args, max_len=ecfg.max_len,
+        envelope_len=get_envelope("serve_kv").seq_max, slots=ecfg.slots,
+        note="weights + donated [slots, max_len] slot state; the bucket's "
+             "fresh prefill cache and activations are window-independent "
+             "(bucket-sized) and ride in the fixed headroom",
+        expect=(("weights", "params*", tree_weight_bytes(qparams)),
+                ("kv_cache", "state.cache*",
+                 skv.hbm_per_slot_bytes(state["cache"], ecfg.slots)
+                 * ecfg.slots)))
     # traced under live telemetry: serve.prefill spans are host-side only
     with TELEMETRY.enabled_scope(sink=ListSink()):
         return trace_jitted(
-            fn, (qparams, state, tokens, true_len, slot_ids, max_new),
+            fn, args,
             name=f"serve_prefill[{cfg.name}][b{bucket}]",
             argnames=("params", "state", "tokens", "true_len", "slot_ids",
                       "max_new"),
             donate_argnums=(1,), ranges=_serve_kv_ranges("state.cache"),
-            envelope="serve_kv")
+            envelope="serve_kv", mem=mem)
 
 
-def serve_decode_entry(arch: str = "smollm-135m") -> TracedEntry:
+def serve_decode_entry(arch: str = "smollm-135m",
+                       kv_quant: bool = True) -> TracedEntry:
     """The serve engine's slot decode step (donated KV-cache carry,
     active-masked position/budget update) — the loop the engine runs once
     per emitted token, so a dead scale invar or a donation alias here is a
-    production serving bug."""
+    production serving bug.
+
+    ``kv_quant=False`` traces the bf16-KV variant of the same step: memcheck
+    compares the two entries' static per-slot window bytes to prove, from
+    the jaxprs alone, that the int8 cache pins strictly less HBM per slot
+    than the bf16 cache (the claim the serve bench measures live).
+    """
+    from repro.core.qtensor import tree_weight_bytes
+    from repro.kernels.envelope import get_envelope
     from repro.serve import engine as seng
+    from repro.serve import kv as skv
 
     cfg, model, qparams, ctx = _deploy_smoke_lm(arch)
-    ecfg = seng.EngineConfig(slots=2, max_len=16, prefill_group=2,
-                             kv_quant=True, min_bucket=8)
+    ecfg = _serve_smoke_config(
+        kv_quant=kv_quant, dtype=None if kv_quant else jnp.bfloat16)
     state = seng.init_state(model, ecfg)
     meta = {k: state[k] for k in ("tokens", "pos", "remaining")}
     fn = jax.jit(seng.make_decode(model, ctx, ecfg), donate_argnums=(1,))
+    tag = "" if kv_quant else "[bf16-kv]"
+    ranges = (_serve_kv_ranges("cache") if kv_quant
+              else (("cache.*", -64.0, 64.0),))
+    args = (qparams, state["cache"], meta)
+    mem = mem_contract(
+        args, max_len=ecfg.max_len,
+        envelope_len=get_envelope("serve_kv").seq_max, slots=ecfg.slots,
+        note="packed weights + donated [slots, max_len] KV window; len "
+             "headroom covers the attention's pre-fusion f32 window views",
+        expect=(("weights", "params*", tree_weight_bytes(qparams)),
+                ("kv_cache", "cache*",
+                 skv.hbm_per_slot_bytes(state["cache"], ecfg.slots)
+                 * ecfg.slots)))
     # traced under live telemetry: serve.decode_step spans are host-side only
     with TELEMETRY.enabled_scope(sink=ListSink()):
         return trace_jitted(
-            fn, (qparams, state["cache"], meta),
-            name=f"serve_decode[{cfg.name}]",
+            fn, args,
+            name=f"serve_decode[{cfg.name}]{tag}",
             argnames=("params", "cache", "meta"),
-            donate_argnums=(1,), ranges=_serve_kv_ranges("cache"),
-            envelope="serve_kv")
+            donate_argnums=(1,), ranges=ranges,
+            envelope="serve_kv", mem=mem)
 
 
 # ------------------------------------------------- quantcheck (QL3xx) entries
@@ -528,3 +685,57 @@ def lost_psum_entry(mesh=None) -> TracedEntry:
     return trace_jitted(jax.jit(fn), (x, y),
                         name="sharded_loss[seeded:lost_psum]",
                         argnames=("x", "y"), mesh=mesh, dp=("data",))
+
+
+# ------------------------------------------------- memcheck (QL4xx) fixtures
+def dead_donation_entry() -> TracedEntry:
+    """Seeded QL402 fixture: an int8 codes buffer donated into a reduction
+    that returns only an f32 scalar — no output shares the donated buffer's
+    shape and dtype, so XLA cannot reuse the storage and the donation buys
+    nothing. QL203 stays quiet (the buffer is consumed exactly once and not
+    returned); this is its silent inverse, visible only to the liveness
+    accounting."""
+    codes = jax.random.randint(jax.random.key(31), (64, 64), -127, 128,
+                               dtype=jnp.int8)
+
+    def flush_stats(codes):
+        return jnp.mean(jnp.abs(codes.astype(jnp.float32)))
+
+    return trace_jitted(
+        jax.jit(flush_stats, donate_argnums=(0,)), (codes,),
+        name="kv_flush_stats[seeded:dead_donation]",
+        argnames=("codes",), donate_argnums=(0,))
+
+
+def hbm_blowout_entry() -> TracedEntry:
+    """Seeded QL401 fixture: decode attention that dequantizes the *whole*
+    int8 KV window to f32 before contracting — the regression
+    ``serve.kv.int8_decode_attention`` exists to prevent. The budget is the
+    honest dequant-free path's (int8 codes + f32 scales per window token,
+    modest slack), so the materialized 4-bytes-per-element f32 window blows
+    past it at the traced length, and 32x worse at the envelope length.
+    """
+    slots, max_len, heads, d = 2, 24, 2, 16
+    codes = jax.random.randint(jax.random.key(32),
+                               (slots, max_len, heads, d), -127, 128,
+                               dtype=jnp.int8)
+    scale = jnp.full((slots, max_len, heads, 1), 1e-2, jnp.float32)
+    q = jax.random.normal(jax.random.key(33), (slots, 1, heads, d),
+                          jnp.float32)
+
+    def bad_attention(q, codes, scale):
+        # BUG (seeded): rematerializes the full window in f32 as a named
+        # intermediate (the healthy path folds scales post-contraction)
+        kv = codes.astype(jnp.float32) * scale
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kv)
+        return jnp.sum(jax.nn.softmax(s, axis=-1))
+
+    args = (q, codes, scale)
+    # tight, int8-sized budget: no 8x f32-view headroom, 2 KiB fixed slack
+    mem = mem_contract(args, max_len=max_len, envelope_len=8192, slots=slots,
+                       headroom=1.5, len_headroom=1.5, fixed_extra=2048,
+                       note="dequant-free budget: int8 codes + scales only")
+    return trace_jitted(
+        jax.jit(bad_attention), args,
+        name="decode_attention[seeded:hbm_blowout]",
+        argnames=("q", "codes", "scale"), mem=mem)

@@ -52,6 +52,10 @@ class ShapeEnvelope:
     scale_min: float = 1e-12   # quantization-grid scale lower bound
     scale_max: float = 256.0   # quantization-grid scale upper bound
     code_max: int = 255        # largest integer weight code (2^bits - 1)
+    seq_max: int = 0           # production sequence window (serve layouts):
+    # the memcheck HBM-budget proof (QL401) scales every [*, max_len]
+    # buffer traced at smoke scale up to this length, so the smoke trace
+    # proves the production window's budget. 0 = no sequence axis.
 
     def contains(self, m: int, k: int, n: int, e: int = 1) -> bool:
         return (1 <= m <= self.m_max and 1 <= k <= self.k_max
@@ -89,7 +93,8 @@ SHAPE_ENVELOPES: Dict[str, ShapeEnvelope] = {
     # |x| <= 64 contract.
     "serve_kv": ShapeEnvelope("serve_kv", _M_MAX, 8192, _N_MAX,
                               x_abs_max=64.0, scale_min=1e-6 / 127.0,
-                              scale_max=64.0 / 127.0, code_max=127),
+                              scale_max=64.0 / 127.0, code_max=127,
+                              seq_max=8192),
 }
 
 

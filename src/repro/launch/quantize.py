@@ -108,6 +108,10 @@ def main():
                          "(repro.analysis): AST rules over src/, jaxpr "
                          "checks on the entry points, kernel-coverage "
                          "report; exit non-zero on error findings")
+    ap.add_argument("--analyze-mem", action="store_true",
+                    help="like --analyze, plus the memcheck layer (QL4xx): "
+                         "jaxpr liveness vs the per-entry HBM-budget "
+                         "contracts over the serve/deploy entries")
     ap.add_argument("--auto-bits", type=float, default=None, metavar="VALUE",
                     help="automatic mixed precision: probe per-site "
                          "sensitivity and allocate bit-widths to meet this "
@@ -260,9 +264,9 @@ def main():
         TELEMETRY.emit({"kind": "snapshot", **TELEMETRY.snapshot()})
         TELEMETRY.disable()
 
-    if args.analyze:
+    if args.analyze or args.analyze_mem:
         from repro.analysis.lint import run_analysis
-        rep = run_analysis()
+        rep = run_analysis(mem=args.analyze_mem)
         print(rep.pretty())
         if rep.exit_code():
             raise SystemExit("quantlint: error findings (see above)")

@@ -14,6 +14,7 @@ Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 """
 from __future__ import annotations
 
+import math
 import re
 from typing import Dict
 
@@ -24,11 +25,47 @@ HBM_BW = 819e9
 LINK_BW = 50e9
 ICI_LINKS = 1  # conservative: one link's worth of bisection per chip
 
-_DTYPE_BYTES = {
+# Bytes per element by HLO short dtype name. Sub-byte packed dtypes carry
+# fractional entries (XLA packs two s4 codes per byte); shared with the
+# memcheck liveness analyzer (repro.analysis.memcheck) so HBM accounting
+# uses one table repo-wide.
+_DTYPE_BYTES: Dict[str, float] = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
     "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
-    "c64": 8, "c128": 16,
+    "c64": 8, "c128": 16, "s4": 0.5, "u4": 0.5,
+    "f8e4m3fn": 1, "f8e5m2": 1,
 }
+
+# numpy/jax dtype name -> HLO short name, for byte accounting over avals.
+NP_TO_HLO = {
+    "bool": "pred", "int8": "s8", "uint8": "u8", "int16": "s16",
+    "uint16": "u16", "int32": "s32", "uint32": "u32", "int64": "s64",
+    "uint64": "u64", "float16": "f16", "bfloat16": "bf16", "float32": "f32",
+    "float64": "f64", "complex64": "c64", "complex128": "c128",
+    "int4": "s4", "uint4": "u4",
+    "float8_e4m3fn": "f8e4m3fn", "float8_e5m2": "f8e5m2",
+}
+
+
+class UnknownDtypeError(ValueError):
+    """An HLO/numpy dtype with no byte-width entry reached the HBM
+    accounting. Silently defaulting (the old ``.get(dtype, 4)`` path) would
+    mis-size sub-byte packed buffers by 8x — add the dtype to
+    ``_DTYPE_BYTES`` instead."""
+
+
+def dtype_bytes(dtype: str) -> float:
+    """Bytes per element for an HLO short name (``s8``) or a numpy/jax
+    dtype name (``int8``). Fractional for sub-byte packed dtypes; raises
+    :class:`UnknownDtypeError` for anything unregistered."""
+    key = NP_TO_HLO.get(dtype, dtype)
+    try:
+        return _DTYPE_BYTES[key]
+    except KeyError:
+        raise UnknownDtypeError(
+            f"no byte-width entry for dtype {dtype!r} — register it in "
+            "roofline.analysis._DTYPE_BYTES (sub-byte packed dtypes take "
+            "fractional entries; do not default to 4)") from None
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
@@ -47,12 +84,12 @@ _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 
 
 def _shape_bytes(dtype: str, dims: str) -> int:
-    b = _DTYPE_BYTES.get(dtype, 4)
+    b = dtype_bytes(dtype)
     n = 1
     for d in dims.split(","):
         if d:
             n *= int(d)
-    return n * b
+    return math.ceil(n * b)
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, int]:

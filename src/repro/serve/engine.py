@@ -324,8 +324,13 @@ class ServeEngine:
         return done
 
     # ------------------------------------------------------------ metrics
+    def hbm_per_slot_bytes(self) -> int:
+        """Bytes of KV state one slot pins, from the live cache pytree —
+        the one accessor the bench row and quantlint's QL403 both read."""
+        return skv.hbm_per_slot_bytes(self.state["cache"], self.cfg.slots)
+
     def hbm_per_slot_mib(self) -> float:
-        return skv.hbm_per_slot_mib(self.state["cache"], self.cfg.slots)
+        return self.hbm_per_slot_bytes() / 2**20
 
     def stats(self) -> Dict[str, Any]:
         """Drain point for the engine's metrics. ``prefill_us`` is a
@@ -340,6 +345,7 @@ class ServeEngine:
             "prefill_us": self.metrics.prefill_summary(),
             "decode_steps": self.decode_steps,
             "tokens_emitted": self.tokens_emitted,
+            "hbm_per_slot_bytes": self.hbm_per_slot_bytes(),
             "hbm_per_slot_MiB": self.hbm_per_slot_mib(),
             "kv_quant": self.cfg.kv_quant,
             "requests": self.metrics.request_summary(),

@@ -119,9 +119,17 @@ def cache_bytes(cache) -> int:
                for leaf in jax.tree.leaves(cache))
 
 
+def hbm_per_slot_bytes(cache, slots: int) -> int:
+    """Bytes of KV state one decode slot pins in HBM, from the live cache
+    pytree (codes + scales, or raw K/V). The single accessor the serve
+    bench row and the memcheck weight-traffic check (QL403) both read —
+    any accounting drift between them is a bug, not a rounding choice."""
+    return cache_bytes(cache) // slots
+
+
 def hbm_per_slot_mib(cache, slots: int) -> float:
     """MiB of KV state one decode slot pins in HBM."""
-    return cache_bytes(cache) / slots / 2**20
+    return hbm_per_slot_bytes(cache, slots) / 2**20
 
 
 def unsupported(family: str, detail: str) -> KVQuantUnsupported:

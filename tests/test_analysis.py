@@ -351,6 +351,149 @@ def test_seeded_quantcheck_runs_exit_nonzero(bug, rule):
     assert any(f.rule == rule for f in rep.errors()), rep.pretty(True)
 
 
+# --------------------------------------------- QL4xx memcheck (liveness)
+def test_memcheck_flags_seeded_dead_donation():
+    from repro.analysis.memcheck import check_memory
+    rep, rec = check_memory(trace.dead_donation_entry())
+    errs = rep.errors()
+    assert errs and all(f.rule == "QL402" for f in errs), rep.pretty(True)
+    assert "no output shares its shape" in errs[0].message
+    assert rec["donation_dead"] == 1 and rec["donation_matched"] == 0
+    # QL203 must stay quiet on it: the donation is useless, not unsafe
+    assert jaxpr_checks.check_donation(trace.dead_donation_entry()).errors() \
+        == []
+
+
+def test_memcheck_flags_donation_lifetime_overlap():
+    """The second QL402 shape: a same-shape output exists but materializes
+    while the donated buffer is still being read."""
+    from repro.analysis.memcheck import check_memory
+
+    def f(a):
+        b = a * 2.0            # shape/dtype-matching candidate, defined early
+        c = jnp.sum(a + b)     # ...but `a` is still read after b exists
+        return b, c
+
+    x = jnp.ones((16, 16), jnp.float32)
+    entry = trace.trace_jitted(jax.jit(f, donate_argnums=(0,)), (x,),
+                               name="overlap", argnames=("a",),
+                               donate_argnums=(0,))
+    errs = check_memory(entry)[0].errors()
+    assert errs and all(f.rule == "QL402" for f in errs), errs
+    assert "lifetimes overlap" in errs[0].message
+
+
+def test_memcheck_flags_seeded_hbm_blowout():
+    from repro.analysis.memcheck import check_memory
+    rep, rec = check_memory(trace.hbm_blowout_entry())
+    errs = rep.errors()
+    assert errs and all(f.rule == "QL401" for f in errs), rep.pretty(True)
+    # blows the budget both at the traced window and at the envelope
+    assert len(errs) == 2
+    assert rec["peak_trace_bytes"] > rec["budget_trace_bytes"]
+    assert rec["peak_envelope_bytes"] > rec["budget_envelope_bytes"]
+
+
+def test_memcheck_quiet_on_clean_entries():
+    from repro.analysis.memcheck import check_memory
+    entries = (trace.recon_chunk_entry(), trace.probe_entry(),
+               trace.flexround_apply_entry(), *trace.matmul_entries())
+    for entry in entries:
+        rep, _ = check_memory(entry)
+        assert rep.errors() == [], f"{entry.name}: {rep.pretty(True)}"
+
+
+def test_memcheck_scan_carry_counted_once():
+    """A donated-carry scan's memory is the carry once across the whole
+    loop body — trip count must not multiply the peak."""
+    from repro.analysis.memcheck import _walk_jaxpr
+
+    def make(trips):
+        def f(c):
+            def body(carry, _):
+                return carry * 0.5 + 1.0, None
+            out, _ = jax.lax.scan(body, c, None, length=trips)
+            return out
+        x = jnp.ones((64, 64), jnp.float32)
+        return trace.trace_jitted(jax.jit(f), (x,), name=f"scan{trips}",
+                                  argnames=("c",))
+
+    p2 = _walk_jaxpr(make(2).closed.jaxpr, 0).peak_at(0)
+    p64 = _walk_jaxpr(make(64).closed.jaxpr, 0).peak_at(0)
+    assert p2 == p64, (p2, p64)
+    # sanity: the carry itself is in the peak
+    assert p2 >= 64 * 64 * 4
+
+
+def test_memcheck_static_kv_gap():
+    """check_kv_static_gap proves int8-below-bf16 from per-token window
+    bytes of the cache invars alone (and errors on the inverse)."""
+    from repro.analysis.memcheck import check_kv_static_gap
+
+    def mk(dtype, tag):
+        cache = jnp.zeros((2, 24, 2, 16), dtype)
+        p = jnp.ones((4,), jnp.float32)
+        f = jax.jit(lambda p, c: c.astype(jnp.float32).sum() + p.sum())
+        mem = trace.mem_contract((p, cache), max_len=24)
+        return trace.trace_jitted(f, (p, cache),
+                                  name=f"serve_decode[toy]{tag}",
+                                  argnames=("params", "cache"), mem=mem)
+
+    int8, bf16 = mk(jnp.int8, ""), mk(jnp.bfloat16, "[bf16-kv]")
+    rep = check_kv_static_gap([int8, bf16])
+    assert rep.errors() == [] and rep.by_rule("QL405"), rep.pretty(True)
+    # inverse world: the "int8" cache grew past bf16 — must error
+    fat = mk(jnp.float32, "")
+    assert check_kv_static_gap([fat, bf16]).exit_code() == 1
+
+
+@pytest.mark.parametrize("bug,rule", [("dead_donation", "QL402"),
+                                      ("hbm_blowout", "QL401")])
+def test_seeded_memcheck_runs_exit_nonzero(bug, rule):
+    from repro.analysis import lint
+    rep = lint.run_analysis(jaxpr_only=True, mem=True, seed_bug=bug,
+                            log=lambda *a, **k: None)
+    assert rep.exit_code() == 1
+    assert any(f.rule == rule for f in rep.errors()), rep.pretty(True)
+
+
+# ------------------------------------------ QL110 inline-ignore staleness
+def test_stale_inline_ignore_errors_on_full_run():
+    src = ("import jax\n"
+           "x = 1  # quantlint: ignore[QL101]\n")
+    # partial runs never audit staleness (mirrors the allowlist audit)
+    assert ast_rules.lint_source(src, "s.py").by_rule("QL110") == []
+    rep = ast_rules.lint_source(src, "s.py", report_stale_ignores=True)
+    stale = rep.by_rule("QL110")
+    assert len(stale) == 1 and ":2" in stale[0].where, rep.pretty(True)
+    assert stale[0].name == "stale-inline-ignore"
+    # a suppression that actually fired is not stale
+    used = ("import jax\n"
+            "f = jax.jit(abs)  # quantlint: ignore[QL101]\n")
+    audited = ast_rules.lint_source(used, "s.py", report_stale_ignores=True)
+    assert audited.by_rule("QL110") == [] and len(audited) == 0
+
+
+def test_stale_ignore_scan_skips_docstrings():
+    """Docstrings quoting the suppression syntax (this repo documents it in
+    three places) are not suppressions — the scan is tokenizer-based."""
+    src = ('"""Use `# quantlint: ignore[QL101]` to suppress."""\n'
+           "x = 1\n")
+    rep = ast_rules.lint_source(src, "s.py", report_stale_ignores=True)
+    assert len(rep) == 0, rep.pretty(True)
+
+
+# ------------------------------------------- roofline dtype accounting
+def test_roofline_dtype_bytes_named_error_and_sub_byte():
+    from repro.roofline.analysis import UnknownDtypeError, dtype_bytes
+    assert dtype_bytes("s4") == 0.5
+    assert dtype_bytes("u4") == 0.5
+    assert dtype_bytes("int8") == 1    # numpy names map through NP_TO_HLO
+    assert dtype_bytes("bf16") == 2
+    with pytest.raises(UnknownDtypeError):
+        dtype_bytes("float128")  # silent .get(dtype, 4) default is gone
+
+
 def test_conv_fallback_warns_once_per_site():
     from repro.core import context as qctx
     qt = trace._export_qt((1, 3, 8, 16), 8)

@@ -166,6 +166,9 @@ def test_int8_kv_halves_hbm_per_slot(deploy_lm):
     mib8 = skv.hbm_per_slot_mib(c8, slots)
     mibb = skv.hbm_per_slot_mib(cb, slots)
     assert mib8 < mibb, f"int8 {mib8} MiB/slot not below bf16 {mibb}"
+    # the bytes accessor is the single source the bench row and memcheck's
+    # QL403 both read — it must tile back to the whole cache
+    assert skv.hbm_per_slot_bytes(c8, slots) * slots == skv.cache_bytes(c8)
 
 
 def test_kv_scales_floored_above_subnormal(deploy_lm):
